@@ -1,0 +1,76 @@
+"""Microbenchmarks for the paper's hot paths (CPU timings; the TPU story is
+the roofline analysis in EXPERIMENTS.md §Roofline)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # µs
+
+
+def bench():
+    rows = []
+    from repro.core.elastic import elastic_update
+    from repro.kernels.elastic.ops import elastic_update_pallas
+
+    tree = {"w": jax.random.normal(jax.random.key(0), (1024, 1024))}
+    mtree = {"w": jax.random.normal(jax.random.key(1), (1024, 1024))}
+    f_jnp = jax.jit(lambda w, m: elastic_update(w, m, 0.1, 0.1))
+    us = _time(f_jnp, tree, mtree)
+    rows.append(("elastic_update_jnp_1M", us, f"{8 * 2 ** 20 / us:.0f}B/us"))
+    f_pal = lambda w, m: elastic_update_pallas(w, m, 0.1, 0.1)
+    us = _time(f_pal, tree, mtree)
+    rows.append(("elastic_update_pallas_interp_1M", us, "interpret-mode"))
+
+    from repro.configs.base import OptimizerConfig
+    from repro.kernels.adahessian.ref import adahessian_step_ref
+
+    cfg = OptimizerConfig()
+    n = 1 << 20
+    args = [jax.random.normal(jax.random.key(i), (n,)) for i in range(4)]
+    args.append(jnp.abs(jax.random.normal(jax.random.key(9), (n,))))
+    f = jax.jit(lambda p, g, h, m, v: adahessian_step_ref(
+        p, g, h, m, v, cfg, 3))
+    us = _time(f, *args)
+    rows.append(("adahessian_step_jnp_1M", us, ""))
+
+    from repro.nn.flash import blockwise_attention, naive_attention
+
+    B, S, H, D = 1, 1024, 4, 64
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    fb = jax.jit(lambda q, k, v: blockwise_attention(
+        q, k, v, q_pos=pos, kv_pos=pos))
+    us_b = _time(fb, q, k, v, iters=5)
+    fn = jax.jit(lambda q, k, v: naive_attention(
+        q, k, v, q_pos=pos, kv_pos=pos))
+    us_n = _time(fn, q, k, v, iters=5)
+    rows.append(("attn_blockwise_1k", us_b, f"naive={us_n:.0f}us"))
+
+    from repro.nn.gla import gla_chunked, gla_ref
+
+    B, T, Hh, N, P = 1, 512, 4, 32, 32
+    ks = jax.random.split(jax.random.key(3), 4)
+    q = jax.random.normal(ks[0], (B, T, Hh, N))
+    k = jax.random.normal(ks[1], (B, T, Hh, N))
+    v = jax.random.normal(ks[2], (B, T, Hh, P))
+    lw = -jnp.abs(jax.random.normal(ks[3], (B, T, Hh))) * 0.1
+    fc = jax.jit(lambda q, k, v, lw: gla_chunked(
+        q, k, v, lw, chunk=64, scalar_decay=True)[0])
+    us_c = _time(fc, q, k, v, lw, iters=5)
+    fr = jax.jit(lambda q, k, v, lw: gla_ref(q, k, v, lw)[0])
+    us_r = _time(fr, q, k, v, lw, iters=5)
+    rows.append(("ssd_chunked_512", us_c, f"sequential={us_r:.0f}us "
+                 f"speedup={us_r / us_c:.1f}x"))
+    return rows

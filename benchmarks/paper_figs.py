@@ -1,0 +1,49 @@
+"""Paper figure/table benchmarks: read the reproduction artifacts
+(results/paper_repro/*.json, produced by repro.experiments.grid) and emit
+one row per figure. If artifacts are missing, run a single fast in-process
+mini version so `python -m benchmarks.run` is always self-contained."""
+import glob
+import json
+import os
+import time
+
+RESULTS = "results/paper_repro"
+
+
+def _rows_from(files, tag):
+    rows = []
+    for path in sorted(files):
+        with open(path) as f:
+            r = json.load(f)
+        name = (f"{tag}_{r['method']}_k{r['k']}_tau{r['tau']}"
+                if tag == "fig45" else f"{tag}_r{r['overlap_ratio']}")
+        us = r["wall_s"] * 1e6 / max(1, r["rounds"])
+        rows.append((name, us, f"final_acc={r['final_acc']:.3f}"))
+    return rows
+
+
+def bench_fig3():
+    files = glob.glob(f"{RESULTS}/fig3_*.json")
+    if files:
+        return _rows_from(files, "fig3")
+    return _mini("EAHES-O", overlap=0.25, tag="fig3_mini")
+
+
+def bench_fig45():
+    files = glob.glob(f"{RESULTS}/fig45_*.json")
+    if files:
+        return _rows_from(files, "fig45")
+    rows = []
+    for m in ("EASGD", "DEAHES-O"):
+        rows += _mini(m, tag=f"fig45_mini_{m}")
+    return rows
+
+
+def _mini(method, overlap=None, tag="mini"):
+    from repro.experiments.paper_repro import run_one
+
+    t0 = time.time()
+    r = run_one(method, 2, 1, rounds=4, n_data=1000, n_test=200,
+                overlap_ratio=overlap)
+    us = (time.time() - t0) * 1e6 / 4
+    return [(tag, us, f"final_acc={r['final_acc']:.3f}")]

@@ -1,0 +1,30 @@
+"""Roofline benchmark: derive the three terms for every dry-run record
+(results/dryrun.jsonl). Emits one row per (arch × shape × mesh)."""
+import os
+
+
+def bench():
+    path = "results/dryrun.jsonl"
+    if not os.path.exists(path):
+        return [("roofline", 0.0, "no dryrun.jsonl — run "
+                 "`python -m repro.launch.dryrun --arch all --shape all "
+                 "--both-meshes --out results/dryrun.jsonl`")]
+    from repro.analysis.roofline import load_records, roofline_from_record
+
+    rows = []
+    for rec in sorted(load_records(path),
+                      key=lambda r: (r["arch"], r["shape"],
+                                     r.get("multi_pod", False))):
+        mesh = "2x16x16" if rec.get("multi_pod") else "16x16"
+        name = f"roofline_{rec['arch']}_{rec['shape']}_{mesh}"
+        if rec["status"] != "ok":
+            rows.append((name, 0.0, rec["status"]))
+            continue
+        r = roofline_from_record(rec)
+        rows.append((
+            name, r.bound_s * 1e6,
+            f"dom={r.dominant};compute={r.compute_s:.4f}s;"
+            f"mem={r.memory_s:.4f}s;coll={r.collective_s:.4f}s;"
+            f"model/hlo={r.flops_ratio:.2f}" if r.flops_ratio else
+            f"dom={r.dominant}"))
+    return rows

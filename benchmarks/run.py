@@ -1,0 +1,27 @@
+"""Benchmark harness — one section per paper table/figure plus the roofline
+and kernel microbenches. Prints ``name,us_per_call,derived`` CSV."""
+import sys
+
+
+def main() -> None:
+    sections = []
+    from benchmarks import kernels_bench, paper_figs, roofline_bench
+
+    sections.append(("kernels", kernels_bench.bench))
+    sections.append(("paper_fig3_overlap", paper_figs.bench_fig3))
+    sections.append(("paper_fig45_convergence", paper_figs.bench_fig45))
+    sections.append(("roofline", roofline_bench.bench))
+
+    print("name,us_per_call,derived")
+    for name, fn in sections:
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+            continue
+        for row_name, us, derived in rows:
+            print(f"{row_name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

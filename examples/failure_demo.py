@@ -1,0 +1,43 @@
+"""Failure anatomy demo: force one worker to fail for a stretch of rounds
+and print the full paper mechanism — u (log distance), raw score a, and the
+h1/h2 weights — before, during, and after the outage.
+
+    PYTHONPATH=src python examples/failure_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+from repro.core.coordinator import ElasticTrainer
+from repro.data.pipeline import WorkerBatcher
+from repro.data.synthetic import SyntheticImages
+from repro.models.registry import build_model
+
+ROUNDS = 14
+OUTAGE = range(4, 9)  # worker 0 loses master contact in these rounds
+
+model = build_model(get_config("paper-cnn"))
+ecfg = ElasticConfig(num_workers=2, tau=1, alpha=0.1, overlap_ratio=0.25,
+                     dynamic=True)
+trainer = ElasticTrainer(model, OptimizerConfig(name="adahessian", lr=0.01),
+                         ecfg)
+state = trainer.init_state(jax.random.key(0))
+ds = SyntheticImages(n=2000, n_test=300)
+batcher = WorkerBatcher(ds.images, ds.labels, ecfg, batch_size=32)
+
+print(" rnd | fail |      u0      a0     h1_0   h2_0 |  master_acc")
+test = {k: jnp.asarray(v) for k, v in ds.test_batch().items()}
+for rnd in range(ROUNDS):
+    batches = {k: jnp.asarray(v) for k, v in batcher.round_batches().items()}
+    fail = jnp.asarray([rnd in OUTAGE, False])
+    state, m = trainer.round_step(state, batches, jax.random.key(rnd), fail,
+                                  jnp.zeros(2, bool))
+    acc = float(trainer.master_accuracy(state, test))
+    print(f"  {rnd:2d} |  {int(fail[0])}   | {float(m['u'][0]):8.3f} "
+          f"{float(m['score'][0]):8.4f} {float(m['h1'][0]):6.3f} "
+          f"{float(m['h2'][0]):6.3f} |    {acc:.3f}")
+
+print("\nDuring the outage u0 climbs (worker drifts); at recovery the "
+      "distance collapses, the score goes negative, and h1→1 / h2→0 snap "
+      "the worker back while protecting the master (paper §V-B).")

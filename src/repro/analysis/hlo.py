@@ -1,0 +1,62 @@
+"""HLO text parsing: collective bytes per category.
+
+``compiled.cost_analysis()`` has FLOPs/bytes but no collective traffic, so
+we parse the (post-SPMD-partitioning) HLO for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops and sum their operand
+sizes. Shapes are parsed from the op's result type annotation, e.g.
+
+    %all-reduce.1 = bf16[1024,512]{1,0} all-reduce(...)
+
+Tuple results (e.g. fused all-reduces) contribute every element.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# one shape token like bf16[8,128]{1,0} or f32[] — captures dtype + dims
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?|pred)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Total result bytes per collective category (skip -done duplicates)."""
+    out: Dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if "-done(" in line:  # async pair: count only the -start
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_ops(hlo_text: str, name: str) -> int:
+    return len(re.findall(rf"\b{re.escape(name)}\b", hlo_text))

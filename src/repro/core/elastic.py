@@ -1,0 +1,31 @@
+"""Elastic-averaging parameter updates (EASGD eqs. 8–9; dynamic eqs. 12–13).
+
+    θ^i ← θ^i − h1 · (θ^i − θ^m)          (worker pulled toward master)
+    θ^m ← θ^m + h2 · (θ^i − θ^m)          (master pulled toward worker)
+
+With h1 = h2 = α this is exactly EASGD's symmetric elastic force. The fused
+form (one pass over both pytrees) also exists as a Pallas TPU kernel
+(``repro.kernels.elastic``); this is the jnp path / oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def elastic_update(worker_params, master_params, w1, w2):
+    """Apply eqs. (12)–(13). w1/w2 are scalars (possibly traced)."""
+
+    def upd(w, m):
+        wf = w.astype(jnp.float32)
+        mf = m.astype(jnp.float32)
+        diff = wf - mf
+        return ((wf - w1 * diff).astype(w.dtype),
+                (mf + w2 * diff).astype(m.dtype))
+
+    pairs = jax.tree.map(upd, worker_params, master_params)
+    new_worker = jax.tree.map(lambda p: p[0], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_master = jax.tree.map(lambda p: p[1], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    return new_worker, new_master

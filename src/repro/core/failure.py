@@ -1,0 +1,33 @@
+"""Worker-failure model (paper §VI): a worker's communication with the master
+is suppressed with probability ``failure_prob`` (1/3 in the paper) at each
+communication round. The failure is *algorithmically invisible* — no detector
+exists; only DEAHES-O's score sees its footprint. The oracle baseline
+(EAHES-OM) is allowed to read this schedule directly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def failure_schedule(rng: jax.Array, rounds: int, k: int, prob: float
+                     ) -> jax.Array:
+    """(rounds, k) bool — True = communication suppressed that round."""
+    return jax.random.bernoulli(rng, prob, (rounds, k))
+
+
+def failure_schedule_np(seed: int, rounds: int, k: int, prob: float
+                        ) -> np.ndarray:
+    return np.random.default_rng(seed).random((rounds, k)) < prob
+
+
+def failed_recently(schedule: jax.Array, t: int | jax.Array, window: int
+                    ) -> jax.Array:
+    """(k,) bool — worker failed in any of the last `window` rounds ≤ t.
+
+    Used only by the oracle baseline EAHES-OM.
+    """
+    rounds = schedule.shape[0]
+    idx = jnp.arange(rounds)
+    in_win = (idx <= t) & (idx > t - window)
+    return jnp.any(schedule & in_win[:, None], axis=0)

@@ -1,0 +1,41 @@
+"""Data overlap partition (paper §V-A).
+
+All k workers share a random subset O with |O| = round(r·n); the remainder
+D − O is split disjointly:  D_j = O ∪ S_j,  |S_j| = ⌊(n−o)/k⌋.
+
+Host-side (numpy) — this feeds the data pipeline, not the jitted graph.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def overlap_partition(
+    n: int, k: int, ratio: float, seed: int = 0
+) -> Tuple[np.ndarray, List[np.ndarray]]:
+    """Returns (overlap_indices, [per-worker unique indices])."""
+    if not 0.0 <= ratio < 1.0:
+        raise ValueError(f"overlap ratio must be in [0,1), got {ratio}")
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    o = int(round(ratio * n))
+    overlap = perm[:o]
+    rest = perm[o:]
+    per = len(rest) // k
+    uniques = [rest[j * per:(j + 1) * per] for j in range(k)]
+    return overlap, uniques
+
+
+def worker_datasets(n: int, k: int, ratio: float, seed: int = 0
+                    ) -> List[np.ndarray]:
+    """D_j = O ∪ S_j index arrays (shuffled per worker, deterministic)."""
+    overlap, uniques = overlap_partition(n, k, ratio, seed)
+    rng = np.random.default_rng(seed + 1)
+    out = []
+    for j in range(k):
+        dj = np.concatenate([overlap, uniques[j]])
+        rng.shuffle(dj)
+        out.append(dj)
+    return out

@@ -1,0 +1,91 @@
+"""Overlap-aware multi-worker batch pipeline (paper §V-A → training rounds).
+
+Given a dataset of n examples and k workers, builds the D_j = O ∪ S_j
+partition and yields per-round batch stacks shaped (τ, k, B, ...) for the
+coordinator's local phase. Deterministic per (seed, round).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.base import ElasticConfig
+from repro.core.overlap import worker_datasets
+
+
+@dataclasses.dataclass
+class WorkerBatcher:
+    """Classification pipeline over (images, labels)."""
+
+    images: np.ndarray
+    labels: np.ndarray
+    ecfg: ElasticConfig
+    batch_size: int = 64
+    seed: int = 0
+
+    def __post_init__(self):
+        n = len(self.images)
+        self.indices = worker_datasets(
+            n, self.ecfg.num_workers, self.ecfg.overlap_ratio, self.seed)
+        self.cursors = [0] * self.ecfg.num_workers
+        self.rngs = [np.random.default_rng(self.seed + 100 + j)
+                     for j in range(self.ecfg.num_workers)]
+        for j, rng in enumerate(self.rngs):
+            rng.shuffle(self.indices[j])
+
+    def _next_worker_batch(self, j: int):
+        idx = self.indices[j]
+        b = self.batch_size
+        if self.cursors[j] + b > len(idx):
+            self.rngs[j].shuffle(idx)
+            self.cursors[j] = 0
+        sel = idx[self.cursors[j]:self.cursors[j] + b]
+        self.cursors[j] += b
+        return {"images": self.images[sel], "labels": self.labels[sel]}
+
+    def round_batches(self) -> Dict[str, np.ndarray]:
+        """(τ, k, B, ...) stacks for one communication round."""
+        tau, k = self.ecfg.tau, self.ecfg.num_workers
+        outs = [[self._next_worker_batch(j) for j in range(k)]
+                for _ in range(tau)]
+        return {
+            key: np.stack([np.stack([outs[t][j][key] for j in range(k)])
+                           for t in range(tau)])
+            for key in outs[0][0]
+        }
+
+
+@dataclasses.dataclass
+class TokenWorkerBatcher:
+    """LM pipeline over a token stream, overlap on window starts."""
+
+    tokens: np.ndarray
+    ecfg: ElasticConfig
+    batch_size: int = 8
+    seq_len: int = 128
+    seed: int = 0
+
+    def __post_init__(self):
+        n_windows = len(self.tokens) - self.seq_len - 1
+        self.starts = worker_datasets(
+            n_windows, self.ecfg.num_workers, self.ecfg.overlap_ratio,
+            self.seed)
+        self.rngs = [np.random.default_rng(self.seed + 200 + j)
+                     for j in range(self.ecfg.num_workers)]
+
+    def _one(self, j):
+        sel = self.rngs[j].choice(self.starts[j], self.batch_size)
+        idx = sel[:, None] + np.arange(self.seq_len + 1)
+        chunk = self.tokens[idx]
+        return {"tokens": chunk[:, :-1], "targets": chunk[:, 1:]}
+
+    def round_batches(self):
+        tau, k = self.ecfg.tau, self.ecfg.num_workers
+        outs = [[self._one(j) for j in range(k)] for _ in range(tau)]
+        return {
+            key: np.stack([np.stack([outs[t][j][key] for j in range(k)])
+                           for t in range(tau)])
+            for key in outs[0][0]
+        }

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused AdaHessian moment + parameter update.
+
+Per element (f32 accumulation):
+
+    m ← β1·m + (1−β1)·g
+    v ← β2·v + (1−β2)·h²          (h = spatially averaged Hessian diagonal)
+    p ← p − lr · (m/bc1) / ((v/bc2)^{κ/2} + ε)
+
+Five HBM reads + three writes fused into one pass over (BLOCK_ROWS × 128)
+VMEM tiles; the jnp path (repro.optim.adahessian) performs the same update
+as ~6 separate elementwise HLO ops. Scalars (lr, β, bias corrections, κ, ε)
+arrive in a small prefetch vector.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _kernel(s_ref, p_ref, g_ref, h_ref, m_ref, v_ref,
+            p_out, m_out, v_out):
+    lr, b1, b2, bc1, bc2, half_k, eps = (s_ref[i] for i in range(7))
+    g = g_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * h * h
+    denom = jnp.exp(half_k * jnp.log(v / bc2 + 1e-30)) + eps
+    p = p_ref[...].astype(jnp.float32) - lr * (m / bc1) / denom
+    p_out[...] = p.astype(p_out.dtype)
+    m_out[...] = m
+    v_out[...] = v
+
+
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "block_rows"))
+def adahessian_update_flat(
+    p, g, h, m, v, scalars, *, interpret: bool = True,
+    block_rows: int = BLOCK_ROWS,
+):
+    """All arrays (rows, 128); scalars (7,) f32 = lr,b1,b2,bc1,bc2,κ/2,ε."""
+    rows, lanes = p.shape
+    assert lanes == LANES and rows % block_rows == 0
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    sspec = pl.BlockSpec((7,), lambda i: (0,))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(rows // block_rows,),
+        in_specs=[sspec, spec, spec, spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+            jax.ShapeDtypeStruct(m.shape, jnp.float32),
+            jax.ShapeDtypeStruct(v.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, p, g, h, m, v)
+    return out

@@ -1,0 +1,36 @@
+"""jit'd wrapper: fused AdaHessian step over flat (rows,128) views."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.kernels.adahessian.kernel import (BLOCK_ROWS, LANES,
+                                             adahessian_update_flat)
+
+
+def pack_scalars(cfg: OptimizerConfig, t: jax.Array) -> jax.Array:
+    b1, b2 = cfg.betas
+    tf = t.astype(jnp.float32)
+    return jnp.stack([
+        jnp.float32(cfg.lr), jnp.float32(b1), jnp.float32(b2),
+        1.0 - b1 ** tf, 1.0 - b2 ** tf,
+        jnp.float32(cfg.hessian_power / 2.0), jnp.float32(cfg.eps),
+    ])
+
+
+def adahessian_step_pallas(p, g, h, m, v, cfg: OptimizerConfig, t,
+                           *, interpret: bool = True):
+    """p,g,h,m,v: 1-D same-length f32 arrays (pre-flattened). Returns
+    (p', m', v') with padding handled internally."""
+    n = p.shape[0]
+    tile = BLOCK_ROWS * LANES
+    pad = (-n) % tile
+    r2 = lambda x: jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, LANES)
+    # pad v with 1s so the fractional power sees a benign value
+    vp = jnp.pad(v.astype(jnp.float32), (0, pad), constant_values=1.0)
+    p2, m2, v2 = adahessian_update_flat(
+        r2(p), r2(g), r2(h), r2(m), vp.reshape(-1, LANES),
+        pack_scalars(cfg, jnp.asarray(t)), interpret=interpret)
+    unr = lambda x: x.reshape(-1)[:n]
+    return unr(p2), unr(m2), unr(v2)

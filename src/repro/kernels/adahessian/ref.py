@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused AdaHessian kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def adahessian_step_ref(p, g, h, m, v, cfg: OptimizerConfig, t):
+    b1, b2 = cfg.betas
+    tf = jnp.asarray(t, jnp.float32)
+    m1 = b1 * m + (1 - b1) * g
+    v1 = b2 * v + (1 - b2) * jnp.square(h)
+    bc1 = 1 - b1 ** tf
+    bc2 = 1 - b2 ** tf
+    denom = jnp.power(v1 / bc2 + 1e-30, cfg.hessian_power / 2.0) + cfg.eps
+    p1 = p - cfg.lr * (m1 / bc1) / denom
+    return p1, m1, v1

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused dynamic-weight elastic update (paper eqs. 12–13).
+
+    θ^i ← θ^i − h1 · (θ^i − θ^m)
+    θ^m ← θ^m + h2 · (θ^i − θ^m)
+
+The update is memory-bound and elementwise over the *entire* parameter
+pytree: the jnp path reads both trees twice (once per equation). The kernel
+fuses both updates into a single HBM round-trip over VMEM tiles of
+(BLOCK_ROWS × 128) — one read of (w, m), one write of (w', m'). h1/h2 are
+prefetched scalars (SMEM) since they are per-*worker*, not per-element.
+
+Weights flow in flattened to (rows, 128); the ops.py wrapper handles pytree
+flattening/padding. Accumulation in f32 regardless of storage dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _kernel(h_ref, w_ref, m_ref, w_out_ref, m_out_ref):
+    h1 = h_ref[0]
+    h2 = h_ref[1]
+    w = w_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    diff = w - m
+    w_out_ref[...] = (w - h1 * diff).astype(w_out_ref.dtype)
+    m_out_ref[...] = (m + h2 * diff).astype(m_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def elastic_update_flat(
+    w: jax.Array,
+    m: jax.Array,
+    h1: jax.Array,
+    h2: jax.Array,
+    *,
+    interpret: bool = True,
+    block_rows: int = BLOCK_ROWS,
+) -> tuple:
+    """w, m: (rows, 128) — rows must be a multiple of ``block_rows``."""
+    rows, lanes = w.shape
+    assert lanes == LANES and rows % block_rows == 0, (w.shape, block_rows)
+    grid = (rows // block_rows,)
+    h = jnp.stack([h1.astype(jnp.float32), h2.astype(jnp.float32)])
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),  # h1/h2 broadcast to all tiles
+            spec, spec,
+        ],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct(m.shape, m.dtype),
+        ],
+        interpret=interpret,
+    )(h, w, m)
+    return out[0], out[1]

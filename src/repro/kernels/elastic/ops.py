@@ -1,0 +1,37 @@
+"""jit'd public wrapper: fused elastic update over parameter pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.elastic.kernel import BLOCK_ROWS, LANES, elastic_update_flat
+
+
+def _flatten_tree(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    n = flat.shape[0]
+    tile = BLOCK_ROWS * LANES
+    pad = (-n) % tile
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), leaves, treedef, n
+
+
+def _unflatten(flat2d, leaves, treedef, n):
+    flat = flat2d.reshape(-1)[:n]
+    out, off = [], 0
+    for l in leaves:
+        out.append(flat[off:off + l.size].reshape(l.shape).astype(l.dtype))
+        off += l.size
+    return jax.tree.unflatten(treedef, out)
+
+
+def elastic_update_pallas(worker_params, master_params, h1, h2, *,
+                          interpret: bool = True):
+    """Fused eqs. (12)–(13) over whole pytrees. Returns (worker', master')."""
+    wf, wl, wd, n = _flatten_tree(worker_params)
+    mf, ml, md, _ = _flatten_tree(master_params)
+    w2d, m2d = elastic_update_flat(
+        wf, mf, jnp.asarray(h1), jnp.asarray(h2), interpret=interpret)
+    return (_unflatten(w2d, wl, wd, n), _unflatten(m2d, ml, md, n))

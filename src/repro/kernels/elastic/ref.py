@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the elastic-update kernel = repro.core.elastic."""
+from repro.core.elastic import elastic_update as elastic_update_ref  # noqa: F401

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the flash-attention kernel (BHSD layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.nn.flash import naive_attention
+
+
+def mha_reference(q, k, v, *, causal=True, window=None, chunk=None):
+    """q: (B,H,S,D), k/v: (B,KVH,S,D) → (B,H,S,D)."""
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    qp = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Skv), (B, Skv))
+    out = naive_attention(
+        jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+        q_pos=qp, kv_pos=kp, causal=causal, window=window, chunk=chunk)
+    return jnp.moveaxis(out, 2, 1)

@@ -1,0 +1,316 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+MUST be the very first two lines (jax locks the device count on first init):
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.analysis.hlo import collective_bytes  # noqa: E402
+from repro.configs.base import (INPUT_SHAPES, OptimizerConfig,  # noqa: E402
+                                get_config, list_archs, normalize_arch,
+                                shape_supported)
+from repro.core.coordinator import ElasticTrainer  # noqa: E402
+from repro.configs.base import ElasticConfig  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.registry import build_model  # noqa: E402
+from repro.nn.param import (ParamSpec, abstract_tree, stack_specs,  # noqa: E402
+                            tree_map_spec)
+from repro.nn.sharding import physical_spec, tree_pspecs  # noqa: E402
+from repro.train.steps import (abstract_train_state,  # noqa: E402
+                               make_serve_step, make_train_step,
+                               train_state_pspecs)
+
+
+# §Perf hillclimb rule-set overrides (see EXPERIMENTS.md §Perf)
+RULE_SETS = {
+    "baseline": None,
+    # Megatron-style sequence parallelism: shard the residual stream's
+    # sequence dim over 'model' (norm/elementwise run on S/16 tokens; GSPMD
+    # gathers at attention/MLP entry, reduce-scatters at exit)
+    "seqpar": {"seq": "model"},
+    # tensor-parallel expert FFNs for MoE archs whose expert count does not
+    # divide the model axis (mixtral 8e on a 16-way axis)
+    "expert_tp": {"expert_mlp": "model"},
+    "seqpar_expert_tp": {"seq": "model", "expert_mlp": "model"},
+    # keep MoE dispatch buffers data-local (no expert-sharded activation
+    # constraint): expert weights are all-gathered per layer instead of
+    # resharding the (B,E,C,d) token buffers — wins when weight bytes ≪
+    # token-buffer bytes (moonshot: 64 small experts)
+    "moe_local": {"act_expert": None},
+    "moe_local_seqpar": {"act_expert": None, "seq": "model"},
+}
+
+
+def _adapt_cfg(cfg, shape_name):
+    """Shape-specific faithful adjustments (DESIGN.md §long_500k)."""
+    if shape_name == "long_500k" and cfg.family == "hybrid":
+        # zamba2's shared attention block runs SWA at 500k context
+        cfg = cfg.replace(sliding_window=4096)
+    return cfg
+
+
+def _named(tree_pspec, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_pspec,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _abstract_inputs(model, shape, mesh, rules=None):
+    specs = model.input_specs(shape)
+    structs = {k: jax.ShapeDtypeStruct(s.shape, s.dtype)
+               for k, s in specs.items()}
+    shardings = {
+        k: NamedSharding(mesh, physical_spec(s.shape, s.axes, mesh, rules))
+        for k, s in specs.items()}
+    return structs, shardings
+
+
+def _analyse(lowered, compiled, mesh, elapsed):
+    n_dev = mesh.devices.size
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception:
+        mem_d = {}
+    try:
+        hlo_text = compiled.as_text()
+        coll = collective_bytes(hlo_text)
+    except Exception:
+        hlo_text, coll = "", {"total": None}
+    # loop-aware re-accounting: XLA's cost_analysis visits while bodies
+    # once, undercounting scanned layer stacks ~L× (see analysis/hlo_cost)
+    try:
+        from repro.analysis.hlo_cost import loop_aware_costs
+
+        la = loop_aware_costs(hlo_text)
+    except Exception as e:  # noqa: BLE001
+        la = {"dot_flops": None, "bytes": None, "coll": {},
+              "coll_total": None, "error": str(e)}
+    return {
+        "devices": int(n_dev),
+        "flops_per_device": cost.get("flops"),
+        "bytes_per_device": cost.get("bytes accessed"),
+        "collective_bytes_per_device": coll,
+        "loop_aware": {
+            "dot_flops_per_device": la.get("dot_flops"),
+            "bytes_per_device": la.get("bytes"),
+            "collective_bytes_per_device": la.get("coll"),
+            "collective_total_per_device": la.get("coll_total"),
+            # loop multipliers (with-loops ÷ trip1) for calibrating
+            # cost_analysis numbers — see analysis/hlo_cost.py
+            "flops_multiplier": (la["dot_flops"] / la["dot_flops_trip1"]
+                                 if la.get("dot_flops_trip1") else None),
+            "bytes_multiplier": (la["bytes"] / la["bytes_trip1"]
+                                 if la.get("bytes_trip1") else None),
+            "coll_multiplier": (la["coll_total"] / la["coll_total_trip1"]
+                                if la.get("coll_total_trip1") else None),
+        },
+        "memory": mem_d,
+        "compile_s": round(elapsed, 1),
+    }
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               opt_name: str = "adahessian", remat: str = "none",
+               rules=None, elastic_workers: int = 2):
+    arch = normalize_arch(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not shape_supported(arch, shape_name):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped",
+                "reason": "full-attention arch at 500k (DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = _adapt_cfg(get_config(arch), shape_name)
+    model = build_model(cfg)
+    opt_cfg = OptimizerConfig(name=opt_name)
+    t0 = time.time()
+
+    if shape.kind == "train" and multi_pod:
+        # The paper's technique in production form: vmapped workers over the
+        # 'pod' axis + dynamic-weight elastic sync (τ local steps inside).
+        k = elastic_workers
+        ecfg = ElasticConfig(num_workers=k, tau=1)
+        trainer = ElasticTrainer(model, opt_cfg, ecfg)
+        rules = dict(rules or {}, worker="pod")
+        wspec = stack_specs(model.spec, k, "worker")
+        f32spec = tree_map_spec(
+            lambda s: ParamSpec(s.shape, jnp.float32, s.init, s.axes), wspec)
+        mspec = tree_map_spec(
+            lambda s: ParamSpec(s.shape, jnp.float32, s.init, s.axes),
+            model.spec)
+        state_spec = {
+            "workers": wspec,
+            "opt": {"count": ParamSpec((k,), jnp.int32, axes=("worker",)),
+                    "m": f32spec, "v": f32spec},
+            "master": mspec,
+            "u_hist": ParamSpec((k, ecfg.score_window), jnp.float32,
+                                axes=("worker", None)),
+            "round": ParamSpec((), jnp.int32),
+        }
+        state = abstract_tree(state_spec)
+        state_sh = _named(tree_pspecs(state_spec, mesh, rules), mesh)
+        in_specs = model.input_specs(shape)
+        per_worker = {
+            name: ParamSpec((1, k, s.shape[0] // k) + s.shape[1:], s.dtype,
+                            axes=(None, "worker") + s.axes)
+            for name, s in in_specs.items()}
+        batches = abstract_tree(per_worker)
+        batch_sh = _named(tree_pspecs(per_worker, mesh, rules), mesh)
+        rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        mask = jax.ShapeDtypeStruct((k,), jnp.bool_)
+        rep = NamedSharding(mesh, P())
+        fn = lambda s, b, r, f, fr: trainer.round_step.__wrapped__(
+            trainer, s, b, r, f, fr)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(state_sh, batch_sh, rep, rep, rep),
+            donate_argnums=(0,))
+        with mesh:
+            lowered = jitted.lower(state, batches, rng, mask, mask)
+            compiled = lowered.compile()
+        out = _analyse(lowered, compiled, mesh, time.time() - t0)
+        out["lowered_kind"] = "elastic_round_step"
+
+    elif shape.kind == "train":
+        from repro.configs.base import TrainConfig
+
+        if opt_name == "adahessian_stale":
+            # beyond-paper lazy-Hessian off-refresh step (§Perf)
+            from repro.train.steps import make_train_step_stale_hessian
+
+            opt_cfg = OptimizerConfig(name="adahessian")
+            train_step = make_train_step_stale_hessian(
+                model, opt_cfg, TrainConfig(remat=remat))
+        else:
+            train_step = make_train_step(model, opt_cfg,
+                                         TrainConfig(remat=remat))
+        state = abstract_train_state(model, opt_cfg)
+        state_sh = _named(train_state_pspecs(model, opt_cfg, mesh, rules),
+                          mesh)
+        batch, batch_sh = _abstract_inputs(model, shape, mesh, rules)
+        rep = NamedSharding(mesh, P())
+        jitted = jax.jit(train_step, in_shardings=(state_sh, batch_sh, rep),
+                         donate_argnums=(0,))
+        rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        with mesh:
+            lowered = jitted.lower(state, batch, rng)
+            compiled = lowered.compile()
+        out = _analyse(lowered, compiled, mesh, time.time() - t0)
+        out["lowered_kind"] = "train_step"
+
+    else:
+        # serving: prefill or decode
+        params = abstract_tree(model.spec)
+        params_sh = _named(tree_pspecs(model.spec, mesh, rules), mesh)
+        cache_len = shape.seq_len
+        B = shape.global_batch
+        cache_spec = model.cache_spec(B, cache_len)
+        cache = abstract_tree(cache_spec)
+        cache_sh = _named(tree_pspecs(cache_spec, mesh, rules), mesh)
+        batch, batch_sh = _abstract_inputs(model, shape, mesh, rules)
+        rep = NamedSharding(mesh, P())
+        if shape.kind == "prefill":
+            step = make_serve_step(model, "prefill")
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, batch_sh, cache_sh),
+                             donate_argnums=(2,))
+            args = (params, batch, cache)
+        else:
+            step = make_serve_step(model, "decode")
+            jitted = jax.jit(
+                step, in_shardings=(params_sh, batch_sh, cache_sh, rep),
+                donate_argnums=(2,))
+            args = (params, batch, cache,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+        with mesh:
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        out = _analyse(lowered, compiled, mesh, time.time() - t0)
+        out["lowered_kind"] = f"serve_step/{shape.kind}"
+
+    out.update({"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "ok", "optimizer": opt_name, "remat": remat,
+                "rules": rules or {}})
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--opt", default="adahessian")
+    ap.add_argument("--remat", default="none", choices=["none", "full"])
+    ap.add_argument("--rules", default="baseline",
+                    choices=sorted(RULE_SETS))
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    pods = [False, True] if args.both_meshes else [args.multi_pod]
+
+    done = set()
+    if args.skip_existing and args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], r["multi_pod"]))
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                if (normalize_arch(arch), shape, mp) in done:
+                    continue
+                tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+                try:
+                    r = dryrun_one(arch, shape, multi_pod=mp,
+                                   opt_name=args.opt, remat=args.remat,
+                                   rules=RULE_SETS[args.rules])
+                except Exception as e:  # noqa: BLE001
+                    r = {"arch": normalize_arch(arch), "shape": shape,
+                         "multi_pod": mp, "status": "error",
+                         "error": f"{type(e).__name__}: {e}",
+                         "trace": traceback.format_exc()[-2000:]}
+                results.append(r)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    fl = r.get("flops_per_device")
+                    extra = (f" flops/dev={fl:.3e}" if fl else "") + \
+                        f" compile={r['compile_s']}s"
+                print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(r) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, "
+          f"{len(results) - n_ok - n_skip} failed")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes ('data', 'model').
+Multi-pod:  (2, 16, 16) = 512 chips, axes ('pod', 'data', 'model') — the
+'pod' axis hosts the paper's elastic *workers* (one worker per pod).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; tests run with the
+default single device).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int = 1, model: int = 1, pod: int = 1) -> Mesh:
+    """Small mesh over however many (host) devices exist — for tests."""
+    axes, shape = [], []
+    if pod > 1:
+        axes.append("pod")
+        shape.append(pod)
+    axes += ["data", "model"]
+    shape += [data, model]
+    return jax.make_mesh(tuple(shape), tuple(axes))

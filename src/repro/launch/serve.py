@@ -1,0 +1,53 @@
+"""Serving launcher: batched greedy generation with any --arch.
+
+On real TPU hardware this would run under make_production_mesh(); on CPU it
+serves the reduced family variant. decode_32k / long_500k production
+lowering is exercised by launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint
+from repro.configs.base import get_config
+from repro.models.registry import build_model
+from repro.nn.param import init_tree, param_count
+from repro.serving.engine import ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--restore", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    params = init_tree(jax.random.key(0), model.spec)
+    if args.restore:
+        params, _ = checkpoint.restore(args.restore, like=params)
+    print(f"serving {cfg.name}: {param_count(model.spec):,} params")
+    engine = ServeEngine(model, params,
+                         max_len=args.prompt_len + args.steps + 1)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype("int32")
+    for trial in range(2):
+        t0 = time.time()
+        out = engine.generate(prompts, steps=args.steps)
+        dt = time.time() - t0
+        print(f"trial {trial}: {out.size} tokens in {dt:.2f}s "
+              f"({out.size/dt:.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Training launcher.
+
+Two modes:
+- ``--elastic``: the paper's system — k workers, τ-periodic dynamic-weight
+  elastic sync, failure injection (this is the default and the point of the
+  framework).
+- plain: single-worker training (the k=1 limit), useful as a control.
+
+On real hardware this runs under the production mesh; on CPU it runs the
+same code on the host mesh. ``--arch`` takes any assigned architecture id
+(smoke variant with ``--smoke``) or ``paper-cnn``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint
+from repro.configs.base import (ElasticConfig, OptimizerConfig, ShapeConfig,
+                                get_config)
+from repro.core.coordinator import ElasticTrainer
+from repro.core.failure import failure_schedule_np
+from repro.data.pipeline import TokenWorkerBatcher, WorkerBatcher
+from repro.data.synthetic import SyntheticImages, SyntheticTokens
+from repro.models.registry import build_model
+from repro.train.steps import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-cnn")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config of the arch family")
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=1)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--optimizer", default="adahessian")
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--overlap", type=float, default=0.25)
+    ap.add_argument("--failure-prob", type=float, default=1 / 3)
+    ap.add_argument("--no-dynamic", action="store_true")
+    ap.add_argument("--elastic", action="store_true", default=True)
+    ap.add_argument("--plain", dest="elastic", action="store_false")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    ocfg = OptimizerConfig(name=args.optimizer, lr=args.lr)
+
+    if cfg.family == "cnn":
+        ds = SyntheticImages(n=8000, n_test=1000)
+        make_batcher = lambda ecfg: WorkerBatcher(
+            ds.images, ds.labels, ecfg, batch_size=args.batch_size,
+            seed=args.seed)
+    else:
+        toks = SyntheticTokens(vocab=cfg.vocab_size, n_tokens=100_000,
+                               seed=args.seed)
+        ds = None
+        make_batcher = lambda ecfg: TokenWorkerBatcher(
+            toks.tokens, ecfg, batch_size=args.batch_size,
+            seq_len=args.seq_len, seed=args.seed)
+
+    if not args.elastic:
+        state = init_train_state(model, ocfg, jax.random.key(args.seed))
+        step = jax.jit(make_train_step(model, ocfg))
+        ecfg = ElasticConfig(num_workers=1, tau=1, overlap_ratio=0.0,
+                             failure_prob=0.0)
+        wb = make_batcher(ecfg)
+        for r in range(args.rounds):
+            b = {k: jnp.asarray(v[0, 0]) for k, v in
+                 wb.round_batches().items()}
+            state, m = step(state, b, jax.random.key(r))
+            print(f"step {r}: loss={float(m['loss']):.4f}", flush=True)
+        if args.save:
+            checkpoint.save(args.save, state["params"])
+        return
+
+    ecfg = ElasticConfig(
+        num_workers=args.workers, tau=args.tau, alpha=args.alpha,
+        overlap_ratio=args.overlap, failure_prob=args.failure_prob,
+        dynamic=not args.no_dynamic)
+    trainer = ElasticTrainer(model, ocfg, ecfg)
+    state = trainer.init_state(jax.random.key(args.seed))
+    wb = make_batcher(ecfg)
+    sched = failure_schedule_np(args.seed + 7, args.rounds, args.workers,
+                                args.failure_prob)
+    t0 = time.time()
+    for r in range(args.rounds):
+        batches = {k: jnp.asarray(v) for k, v in wb.round_batches().items()}
+        fail = jnp.asarray(sched[r])
+        recent = jnp.asarray(
+            sched[max(0, r - ecfg.score_window):r + 1].any(axis=0))
+        state, m = trainer.round_step(
+            state, batches, jax.random.key(args.seed * 997 + r), fail,
+            recent)
+        print(f"round {r}: loss={float(m['loss']):.4f} "
+              f"fails={np.asarray(fail).astype(int).tolist()} "
+              f"score={np.asarray(m['score']).round(3).tolist()} "
+              f"h2={np.asarray(m['h2']).round(3).tolist()} "
+              f"({time.time()-t0:.1f}s)", flush=True)
+    if args.save:
+        checkpoint.save(args.save, state["master"],
+                        metadata={"rounds": args.rounds})
+        print(f"saved master params to {args.save}")
+
+
+if __name__ == "__main__":
+    main()

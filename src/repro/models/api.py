@@ -1,0 +1,57 @@
+"""Model protocol + shared helpers.
+
+Every family builder returns an object with:
+
+- ``cfg``            — the ModelConfig
+- ``spec``           — ParamSpec tree (abstract; materialize via init_tree)
+- ``forward(params, batch, remat=False)``  → (logits, aux_loss)   [train]
+- ``cache_spec(batch_size, cache_len)``    → ParamSpec tree of decode state
+- ``prefill(params, batch, cache)``        → (logits, cache)
+- ``decode_step(params, batch, cache, index)`` → (logits, cache)  [1 token]
+- ``input_specs(shape)``  → dict[str, ParamSpec] describing the batch
+- ``dummy_batch(rng, shape)`` → concrete batch (smoke tests)
+
+Batches are plain dicts; tokens are int32.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.nn.param import ParamSpec, zeros_init
+
+
+def token_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, ParamSpec]:
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda s: ParamSpec(s, jnp.int32, zeros_init, ("batch", "seq"))
+    if shape.kind == "train":
+        return {"tokens": tok((B, S)), "targets": tok((B, S))}
+    if shape.kind == "prefill":
+        return {"tokens": tok((B, S))}
+    # decode: one new token against a cache of length S
+    return {"tokens": ParamSpec((B, 1), jnp.int32, zeros_init, ("batch", None))}
+
+
+def dummy_tokens(rng, cfg: ModelConfig, shape: ShapeConfig):
+    specs = token_input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        rng, k = jax.random.split(rng)
+        out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size, jnp.int32)
+    return out
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array, vocab: int):
+    """Mean token-level cross entropy; logits (B,S,V) any dtype."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def default_positions(batch_size: int, seq_len: int):
+    return jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32),
+                            (batch_size, seq_len))

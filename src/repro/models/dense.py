@@ -1,0 +1,186 @@
+"""Decoder-only transformer LM (dense and MoE variants).
+
+Covers: stablelm-3b, h2o-danube-1.8b, qwen3-4b (dense); mixtral-8x22b,
+llama4-scout, moonshot/moonlight (MoE, incl. first-k-dense and shared
+experts). Layers are *scanned* (stacked params + ``lax.scan``) so the HLO is
+depth-independent — essential for 48-81 layer configs at dry-run compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api
+from repro.nn import layers, moe as moe_lib
+from repro.nn.param import ParamSpec, init_tree, stack_specs, zeros_init
+from repro.nn.sharding import logical_constraint
+
+
+def _block_specs(cfg: ModelConfig, use_moe: bool):
+    p = {
+        "ln1": layers.norm_specs(cfg),
+        "attn": layers.attention_specs(cfg),
+        "ln2": layers.norm_specs(cfg),
+    }
+    if use_moe:
+        p["moe"] = moe_lib.moe_specs(cfg)
+    else:
+        p["mlp"] = layers.mlp_specs(cfg)
+    return p
+
+
+def _apply_block(bp, x, cfg: ModelConfig, use_moe: bool, *, angles,
+                 q_pos, cache=None, cache_index=None):
+    h = layers.apply_norm(bp["ln1"], x, cfg)
+    a, new_cache = layers.multihead_attention(
+        bp["attn"], h, cfg, angles=angles, q_pos=q_pos,
+        cache=cache, cache_index=cache_index,
+    )
+    x = x + a
+    h = layers.apply_norm(bp["ln2"], x, cfg)
+    if use_moe:
+        m, aux = moe_lib.apply_moe(bp["moe"], h, cfg)
+    else:
+        m, aux = layers.apply_mlp(bp["mlp"], h, cfg), 0.0
+    return x + m, aux, new_cache
+
+
+@dataclasses.dataclass
+class DecoderLM:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        cfg = self.cfg
+        n_dense = cfg.first_dense_layers if cfg.moe else cfg.num_layers
+        n_moe = cfg.num_layers - n_dense if cfg.moe else 0
+        self.n_dense, self.n_moe = n_dense, n_moe
+        spec = {"embed": layers.embedding_specs(cfg),
+                "final_norm": layers.norm_specs(cfg)}
+        if n_dense:
+            spec["dense_layers"] = stack_specs(
+                _block_specs(cfg, False), n_dense)
+        if n_moe:
+            spec["moe_layers"] = stack_specs(_block_specs(cfg, True), n_moe)
+        self.spec = spec
+
+    # -- positions / rope ---------------------------------------------------
+    def _angles(self, positions):
+        return layers.rope_angles(positions, self.cfg)
+
+    def positions(self, batch, B, S, offset=0):
+        del batch
+        return api.default_positions(B, S) + offset
+
+    def input_embeds(self, params, batch):
+        return layers.embed(params["embed"], batch["tokens"], self.cfg)
+
+    # -- full-sequence forward (train / logits) ------------------------------
+    def forward(self, params, batch, *, remat: bool = False):
+        cfg = self.cfg
+        x = self.input_embeds(params, batch)
+        B, S, _ = x.shape
+        pos = self.positions(batch, B, S)
+        angles = self._angles(pos)
+        q_pos = api.default_positions(B, S)  # mask positions are sequential
+
+        x, aux = self._stacks(params, x, angles=angles, q_pos=q_pos,
+                              remat=remat)
+        x = layers.apply_norm(params["final_norm"], x, cfg)
+        logits = layers.unembed(params["embed"], x, cfg)
+        return logits, aux
+
+    def _stacks(self, params, x, *, angles, q_pos, remat):
+        cfg = self.cfg
+        aux_total = 0.0
+        for key, use_moe in (("dense_layers", False), ("moe_layers", True)):
+            if key not in params:
+                continue
+
+            def body(carry, lp, _use_moe=use_moe):
+                h, aux = carry
+                h2, a, _ = _apply_block(lp, h, cfg, _use_moe,
+                                        angles=angles, q_pos=q_pos)
+                return (h2, aux + a), None
+
+            fn = jax.checkpoint(body) if remat else body
+            (x, aux_total), _ = jax.lax.scan(
+                fn, (x, aux_total + 0.0), params[key])
+        if isinstance(aux_total, float):
+            aux_total = jnp.zeros((), jnp.float32)
+        return x, aux_total
+
+    # -- decode ---------------------------------------------------------------
+    def cache_spec(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        kv = lambda n: ParamSpec(
+            (n, batch_size, cache_len, cfg.kv_heads, cfg.hd), cfg.adtype,
+            zeros_init, ("layers", "cache_batch", "cache_seq", "cache_heads",
+                         None),
+        )
+        spec = {}
+        if self.n_dense:
+            spec["dense"] = {"k": kv(self.n_dense), "v": kv(self.n_dense)}
+        if self.n_moe:
+            spec["moe"] = {"k": kv(self.n_moe), "v": kv(self.n_moe)}
+        return spec
+
+    def init_cache(self, batch_size: int, cache_len: int):
+        return init_tree(jax.random.key(0),
+                         self.cache_spec(batch_size, cache_len))
+
+    def _with_cache(self, params, batch, cache, index, q_len=None):
+        cfg = self.cfg
+        x = self.input_embeds(params, batch)
+        B = x.shape[0]
+        q_len = x.shape[1]  # total (e.g. patches + text for VLM)
+        pos = self.positions(batch, B, q_len, offset=index)
+        angles = self._angles(pos)
+        q_pos = api.default_positions(B, q_len) + index
+
+        aux = jnp.zeros((), jnp.float32)
+        new_cache = {}
+        for key, ckey, use_moe in (("dense_layers", "dense", False),
+                                   ("moe_layers", "moe", True)):
+            if key not in params:
+                continue
+
+            def body(carry, xs, _use_moe=use_moe):
+                h, aux = carry
+                lp, ck, cv = xs
+                h2, a, nc = _apply_block(
+                    lp, h, cfg, _use_moe, angles=angles, q_pos=q_pos,
+                    cache={"k": ck, "v": cv}, cache_index=index,
+                )
+                return (h2, aux + a), (nc["k"], nc["v"])
+
+            (x, aux), (nk, nv) = jax.lax.scan(
+                body, (x, aux), (params[key], cache[ckey]["k"],
+                                 cache[ckey]["v"]))
+            new_cache[ckey] = {"k": nk, "v": nv}
+        x = layers.apply_norm(params["final_norm"], x, cfg)
+        logits = layers.unembed(params["embed"], x, cfg)
+        return logits, new_cache
+
+    def prefill(self, params, batch, cache):
+        S = batch["tokens"].shape[1]
+        return self._with_cache(params, batch, cache, 0, S)
+
+    def decode_step(self, params, batch, cache, index):
+        return self._with_cache(params, batch, cache, index, 1)
+
+    # -- launch plumbing ------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig):
+        return api.token_input_specs(self.cfg, shape)
+
+    def dummy_batch(self, rng, shape: ShapeConfig):
+        return api.dummy_tokens(rng, self.cfg, shape)
+
+    def loss(self, params, batch, *, remat: bool = False):
+        logits, aux = self.forward(params, batch, remat=remat)
+        ce = api.cross_entropy(logits, batch["targets"], self.cfg.vocab_size)
+        return ce + self.cfg.router_aux_weight * aux, {"ce": ce, "aux": aux}

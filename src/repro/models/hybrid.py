@@ -1,0 +1,271 @@
+"""Zamba2-style hybrid: Mamba2 (SSD) backbone + a *shared* attention+MLP
+block invoked every ``attn_every`` layers (weight-tied across invocations).
+
+arXiv:2411.15242. The SSD sequence mix runs through the shared chunked GLA
+engine (scalar per-head decay, inclusive read). Layers are grouped
+(``attn_every`` Mamba layers + one shared-block invocation) and scanned over
+groups, so the decode cache holds exactly one KV slot per invocation (13 for
+the 81-layer config), not per layer.
+
+Simplification noted in DESIGN.md: Zamba2's per-invocation LoRA deltas on the
+shared block and the concat-with-embedding input are omitted (pure weight
+tying kept).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api
+from repro.nn import layers
+from repro.nn.gla import causal_conv1d, gla_chunked, gla_decode_step
+from repro.nn.param import (ParamSpec, fan_in_init, init_tree, normal_init,
+                            ones_init, stack_specs, zeros_init)
+from repro.nn.sharding import logical_constraint
+
+
+def _d_inner(cfg):
+    return cfg.ssm_expand * cfg.d_model
+
+
+def _n_heads(cfg):
+    return _d_inner(cfg) // cfg.ssm_head_dim
+
+
+def mamba_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    din = _d_inner(cfg)
+    N, H = cfg.ssm_state, _n_heads(cfg)
+    conv_c = din + 2 * N
+    proj_out = 2 * din + 2 * N + H  # z, x, B, C, dt
+    pd = cfg.pdtype
+    return {
+        "norm": layers.norm_specs(cfg),
+        "in_proj": ParamSpec((d, proj_out), pd, fan_in_init(0),
+                             ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.ssm_conv_width, conv_c), jnp.float32,
+                            normal_init(0.1), (None, "mlp")),
+        "conv_b": ParamSpec((conv_c,), jnp.float32, zeros_init, ("mlp",)),
+        "A_log": ParamSpec((H,), jnp.float32,
+                           lambda k, s, dt: jnp.log(
+                               jax.random.uniform(k, s, dt, 1.0, 16.0)),
+                           ("heads",)),
+        "D": ParamSpec((H,), jnp.float32, ones_init, ("heads",)),
+        "dt_bias": ParamSpec((H,), jnp.float32,
+                             lambda k, s, dt: jnp.log(
+                                 jnp.expm1(jax.random.uniform(
+                                     k, s, dt, 1e-3, 1e-1))),
+                             ("heads",)),
+        "gate_norm": {"scale": ParamSpec((din,), jnp.float32, ones_init,
+                                         ("norm",))},
+        "out_proj": ParamSpec((din, d), pd, fan_in_init(0), ("mlp", "embed")),
+    }
+
+
+def apply_mamba(mp, x, cfg: ModelConfig, *, conv_buf=None, state=None):
+    """x: (B,T,d). Returns (out, new_conv_buf, new_state)."""
+    B, T, d = x.shape
+    din = _d_inner(cfg)
+    N, H = cfg.ssm_state, _n_heads(cfg)
+    P = cfg.ssm_head_dim
+    dt_ = x.dtype
+
+    u = layers.apply_norm(mp["norm"], x, cfg)
+    zxbcdt = u @ mp["in_proj"].astype(dt_)
+    z, xBC, dt_raw = jnp.split(zxbcdt, [din, 2 * din + 2 * N], axis=-1)
+    xBC, new_conv = causal_conv1d(xBC, mp["conv_w"], buffer=conv_buf)
+    xBC = jax.nn.silu(xBC + mp["conv_b"].astype(dt_))
+    xs, Bc, Cc = jnp.split(xBC, [din, din + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + mp["dt_bias"])  # (B,T,H)
+    logw = -jnp.exp(mp["A_log"])[None, None] * dt  # (B,T,H)
+
+    v = xs.reshape(B, T, H, P) * dt[..., None].astype(dt_)
+    q = jnp.broadcast_to(Cc[:, :, None], (B, T, H, N))
+    k = jnp.broadcast_to(Bc[:, :, None], (B, T, H, N))
+
+    if T == 1 and state is not None:
+        y, new_state = gla_decode_step(
+            state, q[:, 0], k[:, 0], v[:, 0], logw[:, 0], inclusive=True)
+        y = y[:, None]
+    else:
+        # scalar per-head decay → exact pairwise-decay chunked path
+        y, new_state = gla_chunked(
+            q, k, v, logw, chunk=min(cfg.scan_chunk, T), inclusive=True,
+            initial_state=state, scalar_decay=True)
+    y = y + mp["D"].astype(dt_)[None, None, :, None] * xs.reshape(B, T, H, P)
+    y = y.reshape(B, T, din) * jax.nn.silu(z)
+    y = layers.rms_norm(y, mp["gate_norm"]["scale"], cfg.norm_eps)
+    return x + y @ mp["out_proj"].astype(dt_), new_conv, new_state
+
+
+def shared_block_specs(cfg: ModelConfig):
+    return {
+        "ln1": layers.norm_specs(cfg),
+        "attn": layers.attention_specs(cfg),
+        "ln2": layers.norm_specs(cfg),
+        "mlp": layers.mlp_specs(cfg),
+    }
+
+
+def apply_shared_block(sp, x, cfg, *, angles, q_pos, cache=None,
+                       cache_index=None):
+    h = layers.apply_norm(sp["ln1"], x, cfg)
+    a, new_cache = layers.multihead_attention(
+        sp["attn"], h, cfg, angles=angles, q_pos=q_pos, cache=cache,
+        cache_index=cache_index)
+    x = x + a
+    h = layers.apply_norm(sp["ln2"], x, cfg)
+    return x + layers.apply_mlp(sp["mlp"], h, cfg), new_cache
+
+
+@dataclasses.dataclass
+class HybridLM:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        cfg = self.cfg
+        every = cfg.attn_every or cfg.num_layers
+        self.n_groups = cfg.num_layers // every
+        self.tail = cfg.num_layers - self.n_groups * every
+        self.every = every
+        spec = {
+            "embed": layers.embedding_specs(cfg),
+            "shared": shared_block_specs(cfg),
+            "groups": stack_specs(
+                stack_specs(mamba_specs(cfg), every), self.n_groups),
+            "final_norm": layers.norm_specs(cfg),
+        }
+        if self.tail:
+            spec["tail"] = stack_specs(mamba_specs(cfg), self.tail)
+        self.spec = spec
+
+    def _run(self, params, x, *, angles, q_pos, cache=None, cache_index=None,
+             remat=False):
+        cfg = self.cfg
+        decode = cache is not None
+
+        def mamba_scan(h, lps, bufs=None, states=None):
+            def body(carry, xs):
+                hh = carry
+                if bufs is None:
+                    out, nb, ns = apply_mamba(xs, hh, cfg)
+                else:
+                    out, nb, ns = apply_mamba(
+                        xs[0], hh, cfg, conv_buf=xs[1], state=xs[2])
+                return out, (nb, ns)
+
+            fn = jax.checkpoint(body) if remat else body
+            xs = lps if bufs is None else (lps, bufs, states)
+            return jax.lax.scan(fn, h, xs)
+
+        def group_body(carry, xs):
+            h = carry
+            if decode:
+                gp, bufs, states, ck, cv = xs
+                h, (nb, ns) = mamba_scan(h, gp, bufs, states)
+                h, nc = apply_shared_block(
+                    params["shared"], h, cfg, angles=angles, q_pos=q_pos,
+                    cache={"k": ck, "v": cv}, cache_index=cache_index)
+                return h, (nb, ns, nc["k"], nc["v"])
+            gp = xs
+            h, _ = mamba_scan(h, gp)
+            h, _ = apply_shared_block(params["shared"], h, cfg,
+                                      angles=angles, q_pos=q_pos)
+            return h, None
+
+        if decode:
+            fn = group_body
+            x, (nb, ns, nk, nv) = jax.lax.scan(
+                fn, x, (params["groups"], cache["conv"], cache["state"],
+                        cache["k"], cache["v"]))
+            new_cache = {"conv": nb, "state": ns, "k": nk, "v": nv}
+            if self.tail:
+                x, (tb, ts) = mamba_scan(x, params["tail"],
+                                         cache["tail_conv"],
+                                         cache["tail_state"])
+                new_cache["tail_conv"], new_cache["tail_state"] = tb, ts
+            return x, new_cache
+        fn = jax.checkpoint(group_body) if remat else group_body
+        x, _ = jax.lax.scan(fn, x, params["groups"])
+        if self.tail:
+            x, _ = mamba_scan(x, params["tail"])
+        return x, None
+
+    def forward(self, params, batch, *, remat: bool = False):
+        cfg = self.cfg
+        x = layers.embed(params["embed"], batch["tokens"], cfg)
+        B, S, _ = x.shape
+        pos = api.default_positions(B, S)
+        x, _ = self._run(params, x, angles=layers.rope_angles(pos, cfg),
+                         q_pos=pos, remat=remat)
+        x = layers.apply_norm(params["final_norm"], x, cfg)
+        return layers.unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+    def cache_spec(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        G, E, T = self.n_groups, self.every, self.tail
+        din = _d_inner(cfg)
+        N, H, P = cfg.ssm_state, _n_heads(cfg), cfg.ssm_head_dim
+        conv_c = din + 2 * N
+        K = cfg.ssm_conv_width
+        spec = {
+            "conv": ParamSpec((G, E, batch_size, K - 1, conv_c), cfg.adtype,
+                              zeros_init,
+                              ("layers", None, "cache_batch", None, "mlp")),
+            "state": ParamSpec((G, E, batch_size, H, N, P), jnp.float32,
+                               zeros_init,
+                               ("layers", None, "cache_batch", "cache_heads",
+                                None, None)),
+            "k": ParamSpec((G, batch_size, cache_len, cfg.kv_heads, cfg.hd),
+                           cfg.adtype, zeros_init,
+                           ("layers", "cache_batch", "cache_seq",
+                            "cache_heads", None)),
+            "v": ParamSpec((G, batch_size, cache_len, cfg.kv_heads, cfg.hd),
+                           cfg.adtype, zeros_init,
+                           ("layers", "cache_batch", "cache_seq",
+                            "cache_heads", None)),
+        }
+        if T:
+            spec["tail_conv"] = ParamSpec(
+                (T, batch_size, K - 1, conv_c), cfg.adtype, zeros_init,
+                ("layers", "cache_batch", None, "mlp"))
+            spec["tail_state"] = ParamSpec(
+                (T, batch_size, H, N, P), jnp.float32, zeros_init,
+                ("layers", "cache_batch", "cache_heads", None, None))
+        return spec
+
+    def init_cache(self, batch_size: int, cache_len: int):
+        return init_tree(jax.random.key(0),
+                         self.cache_spec(batch_size, cache_len))
+
+    def _cached(self, params, batch, cache, index, q_len):
+        cfg = self.cfg
+        x = layers.embed(params["embed"], batch["tokens"], cfg)
+        B = x.shape[0]
+        pos = api.default_positions(B, q_len) + index
+        x, new_cache = self._run(
+            params, x, angles=layers.rope_angles(pos, cfg), q_pos=pos,
+            cache=cache, cache_index=index)
+        x = layers.apply_norm(params["final_norm"], x, cfg)
+        return layers.unembed(params["embed"], x, cfg), new_cache
+
+    def prefill(self, params, batch, cache):
+        return self._cached(params, batch, cache, 0, batch["tokens"].shape[1])
+
+    def decode_step(self, params, batch, cache, index):
+        return self._cached(params, batch, cache, index, 1)
+
+    def input_specs(self, shape: ShapeConfig):
+        return api.token_input_specs(self.cfg, shape)
+
+    def dummy_batch(self, rng, shape: ShapeConfig):
+        return api.dummy_tokens(rng, self.cfg, shape)
+
+    def loss(self, params, batch, *, remat: bool = False):
+        logits, aux = self.forward(params, batch, remat=remat)
+        ce = api.cross_entropy(logits, batch["targets"], self.cfg.vocab_size)
+        return ce, {"ce": ce, "aux": aux}

@@ -1,0 +1,35 @@
+"""build_model(cfg) — family dispatch."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, get_config
+
+
+def build_model(cfg_or_arch, smoke: bool = False):
+    cfg = (cfg_or_arch if isinstance(cfg_or_arch, ModelConfig)
+           else get_config(cfg_or_arch, smoke=smoke))
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        from repro.models.dense import DecoderLM
+
+        return DecoderLM(cfg)
+    if fam == "hybrid":
+        from repro.models.hybrid import HybridLM
+
+        return HybridLM(cfg)
+    if fam == "rwkv":
+        from repro.models.rwkv6 import RWKV6LM
+
+        return RWKV6LM(cfg)
+    if fam == "encdec":
+        from repro.models.encdec import EncDecLM
+
+        return EncDecLM(cfg)
+    if fam == "vlm":
+        from repro.models.vlm import VLM
+
+        return VLM(cfg)
+    if fam == "cnn":
+        from repro.models.cnn import PaperCNN
+
+        return PaperCNN(cfg)
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,239 @@
+"""RWKV6 ("Finch") — attention-free RNN LM with data-dependent decay.
+
+arXiv:2404.05892. Time-mix uses data-dependent token-shift (ddlerp via a
+low-rank MLP over the shifted pair) and a per-channel data-dependent decay
+w_t = exp(-exp(ω_t)); the wkv recurrence runs through the shared chunked GLA
+engine (exclusive read + bonus u). Channel-mix is the squared-ReLU variant.
+
+Train/prefill: chunked scan (MXU-friendly); decode: O(1) state update.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api
+from repro.nn import layers
+from repro.nn.gla import gla_chunked, gla_decode_step
+from repro.nn.param import (ParamSpec, fan_in_init, init_tree, normal_init,
+                            ones_init, stack_specs, zeros_init)
+from repro.nn.sharding import logical_constraint
+
+MIX_RANK = 32
+DECAY_RANK = 64
+
+
+def _ln_specs(d):
+    return {"scale": ParamSpec((d,), jnp.float32, ones_init, ("norm",)),
+            "bias": ParamSpec((d,), jnp.float32, zeros_init, ("norm",))}
+
+
+def _ln(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), -1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]).astype(dt)
+
+
+def _group_norm(x, scale, bias, eps=1e-5):
+    """x: (B,T,H,P) — LayerNorm per head."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), -1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dt)
+
+
+def _layer_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    P = cfg.rwkv_head_dim
+    pd = cfg.pdtype
+    lin = lambda dout: ParamSpec((d, dout), pd, fan_in_init(0),
+                                 ("embed", "mlp"))
+    return {
+        "ln1": _ln_specs(d),
+        "ln2": _ln_specs(d),
+        "tm": {
+            "mu_x": ParamSpec((d,), jnp.float32, zeros_init, (None,)),
+            "mu": ParamSpec((5, d), jnp.float32, zeros_init, (None, None)),
+            "mix_w1": ParamSpec((d, 5 * MIX_RANK), pd, normal_init(0.01),
+                                ("embed", None)),
+            "mix_w2": ParamSpec((5, MIX_RANK, d), pd, normal_init(0.01),
+                                (None, None, "embed_tp")),
+            "wr": lin(d), "wk": lin(d), "wv": lin(d), "wg": lin(d),
+            "w0": ParamSpec((d,), jnp.float32,
+                            lambda k, s, dt: jnp.full(s, -0.6, dt), (None,)),
+            "w1": ParamSpec((d, DECAY_RANK), pd, normal_init(0.01),
+                            ("embed", None)),
+            "w2": ParamSpec((DECAY_RANK, d), pd, normal_init(0.01),
+                            (None, "embed_tp")),
+            "u": ParamSpec((H, P), jnp.float32, normal_init(0.3),
+                           ("heads", None)),
+            "gn_scale": ParamSpec((H, P), jnp.float32, ones_init,
+                                  ("heads", None)),
+            "gn_bias": ParamSpec((H, P), jnp.float32, zeros_init,
+                                 ("heads", None)),
+            "wo": ParamSpec((d, d), pd, fan_in_init(0), ("mlp", "embed")),
+        },
+        "cm": {
+            "mu_k": ParamSpec((d,), jnp.float32, zeros_init, (None,)),
+            "mu_r": ParamSpec((d,), jnp.float32, zeros_init, (None,)),
+            "wk": ParamSpec((d, cfg.d_ff), pd, fan_in_init(0),
+                            ("embed", "mlp")),
+            "wv": ParamSpec((cfg.d_ff, d), pd, fan_in_init(0),
+                            ("mlp", "embed")),
+            "wr": ParamSpec((d, d), pd, fan_in_init(0), ("embed", "mlp")),
+        },
+    }
+
+
+def _shift(x, prev):
+    """prev token's x; full-seq: shift right. prev: (B,d) or None."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None].astype(x.dtype), x[:, :-1]], 1)
+
+
+def _time_mix(tp, x, cfg, *, prev=None, state=None, chunk=256):
+    """x: (B,T,d). Returns (out, last_x, new_state)."""
+    B, T, d = x.shape
+    H, P = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    dt = x.dtype
+    sx = _shift(x, prev) - x
+    xxx = x + sx * tp["mu_x"].astype(dt)
+    dd = jnp.tanh(xxx @ tp["mix_w1"].astype(dt))  # (B,T,5r)
+    dd = dd.reshape(B, T, 5, MIX_RANK)
+    dmix = jnp.einsum("btcr,crd->cbtd", dd, tp["mix_w2"].astype(dt))
+    mix = tp["mu"].astype(dt)[:, None, None] + dmix  # (5,B,T,d)
+    xr, xk, xv, xw, xg = (x + sx * mix[i] for i in range(5))
+
+    r = (xr @ tp["wr"].astype(dt)).reshape(B, T, H, P)
+    k = (xk @ tp["wk"].astype(dt)).reshape(B, T, H, P)
+    v = (xv @ tp["wv"].astype(dt)).reshape(B, T, H, P)
+    g = jax.nn.silu(xg @ tp["wg"].astype(dt))
+    omega = tp["w0"] + jnp.tanh(xw @ tp["w1"].astype(dt)) @ tp["w2"].astype(dt)
+    logw = -jnp.exp(omega.astype(jnp.float32)).reshape(B, T, H, P)
+
+    # decay floor tied to the training chunk (see gla_chunked docstring);
+    # decode applies the same floor so train/decode semantics match.
+    floor = -30.0 / chunk
+    if T == 1 and state is not None:
+        y, new_state = gla_decode_step(
+            state, r[:, 0], k[:, 0], v[:, 0], logw[:, 0],
+            inclusive=False, bonus=tp["u"], decay_floor=floor)
+        y = y[:, None]
+    else:
+        y, new_state = gla_chunked(
+            r, k, v, logw, chunk=min(chunk, T), inclusive=False,
+            bonus=tp["u"], initial_state=state, decay_floor=floor)
+    y = _group_norm(y, tp["gn_scale"], tp["gn_bias"])
+    y = (y.reshape(B, T, d) * g) @ tp["wo"].astype(dt)
+    return y, x[:, -1], new_state
+
+
+def _channel_mix(cp, x, *, prev=None):
+    dt = x.dtype
+    sx = _shift(x, prev) - x
+    xk = x + sx * cp["mu_k"].astype(dt)
+    xr = x + sx * cp["mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk @ cp["wk"].astype(dt)))
+    kk = logical_constraint(kk, ("batch", "seq", "act_mlp"))
+    out = jax.nn.sigmoid(xr @ cp["wr"].astype(dt)) * (kk @ cp["wv"].astype(dt))
+    return out, x[:, -1]
+
+
+@dataclasses.dataclass
+class RWKV6LM:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        cfg = self.cfg
+        self.spec = {
+            "embed": layers.embedding_specs(cfg),
+            "ln_in": _ln_specs(cfg.d_model),
+            "layers": stack_specs(_layer_specs(cfg), cfg.num_layers),
+            "final_norm": _ln_specs(cfg.d_model),
+        }
+
+    def _blocks(self, params, x, caches=None, remat=False):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h = carry[0]
+            lp = xs[0]
+            tm_prev = cm_prev = state = None
+            if caches is not None:
+                _, tm_prev, cm_prev, state = None, xs[1], xs[2], xs[3]
+            a, tm_last, new_state = _time_mix(
+                lp["tm"], _ln(lp["ln1"], h), cfg, prev=tm_prev, state=state,
+                chunk=cfg.scan_chunk)
+            h = h + a
+            m, cm_last = _channel_mix(lp["cm"], _ln(lp["ln2"], h),
+                                      prev=cm_prev)
+            h = h + m
+            return (h,), (tm_last, cm_last, new_state)
+
+        fn = jax.checkpoint(body) if remat else body
+        xs = (params["layers"],) if caches is None else (
+            params["layers"], caches["tm_x"], caches["cm_x"], caches["state"])
+        (x,), (tm_x, cm_x, state) = jax.lax.scan(fn, (x,), xs)
+        return x, {"tm_x": tm_x, "cm_x": cm_x, "state": state}
+
+    def forward(self, params, batch, *, remat: bool = False):
+        cfg = self.cfg
+        x = layers.embed(params["embed"], batch["tokens"], cfg)
+        x = _ln(params["ln_in"], x)
+        x, _ = self._blocks(params, x, remat=remat)
+        x = _ln(params["final_norm"], x)
+        return layers.unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+    def cache_spec(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        L, d = cfg.num_layers, cfg.d_model
+        H, P = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+        return {
+            "tm_x": ParamSpec((L, batch_size, d), cfg.adtype, zeros_init,
+                              ("layers", "cache_batch", None)),
+            "cm_x": ParamSpec((L, batch_size, d), cfg.adtype, zeros_init,
+                              ("layers", "cache_batch", None)),
+            "state": ParamSpec((L, batch_size, H, P, P), jnp.float32,
+                               zeros_init,
+                               ("layers", "cache_batch", "cache_heads", None,
+                                None)),
+        }
+
+    def init_cache(self, batch_size: int, cache_len: int):
+        return init_tree(jax.random.key(0),
+                         self.cache_spec(batch_size, cache_len))
+
+    def _cached_forward(self, params, batch, cache):
+        cfg = self.cfg
+        x = layers.embed(params["embed"], batch["tokens"], cfg)
+        x = _ln(params["ln_in"], x)
+        x, new_cache = self._blocks(params, x, caches=cache)
+        x = _ln(params["final_norm"], x)
+        return layers.unembed(params["embed"], x, cfg), new_cache
+
+    def prefill(self, params, batch, cache):
+        return self._cached_forward(params, batch, cache)
+
+    def decode_step(self, params, batch, cache, index):
+        del index  # state is positionless
+        return self._cached_forward(params, batch, cache)
+
+    def input_specs(self, shape: ShapeConfig):
+        return api.token_input_specs(self.cfg, shape)
+
+    def dummy_batch(self, rng, shape: ShapeConfig):
+        return api.dummy_tokens(rng, self.cfg, shape)
+
+    def loss(self, params, batch, *, remat: bool = False):
+        logits, aux = self.forward(params, batch, remat=remat)
+        ce = api.cross_entropy(logits, batch["targets"], self.cfg.vocab_size)
+        return ce, {"ce": ce, "aux": aux}

@@ -1,0 +1,93 @@
+"""Qwen2-VL-style VLM backbone: dense GQA decoder + M-RoPE + patch inputs.
+
+arXiv:2409.12191. The vision frontend (ViT + merger) is a STUB per the
+assignment carve-out — the batch carries precomputed patch embeddings
+(B, Np, d_model) which are prepended to the text embeddings. M-RoPE splits
+each rotary half into (temporal, height, width) sections; vision tokens get
+grid (h, w) coordinates at t=0, text tokens get equal (t,h,w) starting after
+the vision grid extent (dynamic-resolution semantics, one image per sample).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api
+from repro.models.dense import DecoderLM
+from repro.nn import layers
+from repro.nn.param import ParamSpec, zeros_init
+
+
+@dataclasses.dataclass
+class VLM(DecoderLM):
+    cfg: ModelConfig
+
+    @property
+    def grid(self) -> int:
+        return max(1, int(math.sqrt(self.cfg.num_patch_tokens)))
+
+    def _mrope_positions(self, B, n_patch, n_text, offset=0):
+        g = self.grid
+        idx = jnp.arange(n_patch, dtype=jnp.int32)
+        vis = jnp.stack([jnp.zeros_like(idx), idx // g, idx % g])  # (3, Np)
+        t0 = g  # text starts after the grid extent
+        txt = jnp.broadcast_to(t0 + jnp.arange(n_text, dtype=jnp.int32),
+                               (3, n_text))
+        pos = jnp.concatenate([vis, txt], axis=1) if n_patch else txt
+        return jnp.broadcast_to(pos[:, None], (3, B, n_patch + n_text)) + offset
+
+    def positions(self, batch, B, S, offset=0):
+        if "patches" in batch:
+            n_patch = batch["patches"].shape[1]
+            return self._mrope_positions(B, n_patch, S - n_patch, offset)
+        # decode: global index `offset` counts patches + text, but M-RoPE
+        # text positions advance from the grid extent by *text* index only
+        return self._mrope_positions(
+            B, 0, S, offset - self.cfg.num_patch_tokens)
+
+    def input_embeds(self, params, batch):
+        cfg = self.cfg
+        txt = layers.embed(params["embed"], batch["tokens"], cfg)
+        if "patches" in batch:
+            return jnp.concatenate(
+                [batch["patches"].astype(cfg.adtype), txt], axis=1)
+        return txt
+
+    def input_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        Np = min(cfg.num_patch_tokens, S // 4)
+        patches = ParamSpec((B, Np, cfg.d_model), cfg.adtype, zeros_init,
+                            ("batch", "seq", None))
+        tok = lambda s: ParamSpec(s, jnp.int32, zeros_init, ("batch", "seq"))
+        if shape.kind == "train":
+            return {"patches": patches, "tokens": tok((B, S - Np)),
+                    "targets": tok((B, S - Np))}
+        if shape.kind == "prefill":
+            return {"patches": patches, "tokens": tok((B, S - Np))}
+        return {"tokens": ParamSpec((B, 1), jnp.int32, zeros_init,
+                                    ("batch", None))}
+
+    def dummy_batch(self, rng, shape: ShapeConfig):
+        cfg = self.cfg
+        out = {}
+        for name, s in self.input_specs(shape).items():
+            rng, k = jax.random.split(rng)
+            if s.dtype == jnp.int32:
+                out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size,
+                                               jnp.int32)
+            else:
+                out[name] = jax.random.normal(k, s.shape, s.dtype)
+        return out
+
+    def loss(self, params, batch, *, remat: bool = False):
+        logits, aux = self.forward(params, batch, remat=remat)
+        n_patch = batch["patches"].shape[1] if "patches" in batch else 0
+        text_logits = logits[:, n_patch:]
+        ce = api.cross_entropy(text_logits, batch["targets"],
+                               self.cfg.vocab_size)
+        return ce + self.cfg.router_aux_weight * aux, {"ce": ce, "aux": aux}

@@ -1,0 +1,140 @@
+"""Blockwise (FlashAttention-style) attention in pure JAX.
+
+XLA-native online-softmax attention: a double ``lax.scan`` over query and KV
+blocks keeps live memory O(block²) instead of O(seq²) — mandatory at the
+assigned shapes (train_4k @ batch 256, prefill_32k). On TPU the Pallas kernel
+in ``repro.kernels.flash_attention`` replaces this; numerics are identical
+(both are validated against ``naive_attention``).
+
+Sliding-window / chunked-causal masks *skip* fully-masked KV blocks via a
+``lax.cond`` fast path (no MXU work for out-of-window blocks) — this is the
+TPU adaptation of the paper-agnostic locality optimizations (see
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pair_mask(qp, kp, causal, window, chunk):
+    """qp: (..., bq, 1), kp: (..., 1, bk) → bool mask."""
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m &= kp <= qp
+    if window:
+        m &= (qp - kp) < window
+    if chunk:
+        m &= (qp // chunk) == (kp // chunk)
+    return m
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: Optional[int] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    """q: (B,Sq,H,D); k,v: (B,Skv,KVH,D); *_pos: (B,S) → (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv, block_q, block_k)
+    nq, nk = Sq // block_q, Skv // block_k
+    scale = 1.0 / math.sqrt(D)
+
+    qb = jnp.moveaxis(q.reshape(B, nq, block_q, KVH, G, D), 1, 0)
+    qpb = jnp.moveaxis(q_pos.reshape(B, nq, block_q), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, block_k, KVH, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, block_k, KVH, D), 1, 0)
+    kpb = jnp.moveaxis(kv_pos.reshape(B, nk, block_k), 1, 0)
+
+    def q_block(args):
+        qi, qpi = args
+        # carries: m (B,KVH,G,bq), l, acc (B,KVH,G,bq,D)
+        m0 = jnp.full((B, KVH, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, block_q, D), jnp.float32)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, vi, kpi = inp
+
+            def compute(_):
+                s = jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", qi, ki,
+                    preferred_element_type=jnp.float32,
+                ) * scale
+                pm = _pair_mask(
+                    qpi[:, None, None, :, None],
+                    kpi[:, None, None, None, :],
+                    causal, window, chunk,
+                )
+                s = jnp.where(pm, s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, -1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, -1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p.astype(vi.dtype), vi
+                ).astype(jnp.float32)
+                return m_new, l_new, acc_new
+
+            # Block-level skip: if no (q,k) pair in this block pair can be
+            # live, bypass the matmuls entirely.
+            q_lo, q_hi = jnp.min(qpi), jnp.max(qpi)
+            k_lo, k_hi = jnp.min(kpi), jnp.max(kpi)
+            live = jnp.array(True)
+            if causal:
+                live &= k_lo <= q_hi
+            if window:
+                live &= (q_lo - k_hi) < window
+            if chunk:
+                live &= (q_hi // chunk) >= (k_lo // chunk)
+                live &= (q_lo // chunk) <= (k_hi // chunk)
+            return jax.lax.cond(live, compute, lambda _: (m, l, acc), None), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kpb))
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = (acc / l[..., None]).astype(q.dtype)  # (B,KVH,G,bq,D)
+        return jnp.moveaxis(out, 3, 1).reshape(B, block_q, H, D)
+
+    outs = jax.lax.map(jax.checkpoint(q_block), (qb, qpb))  # (nq,B,bq,H,D)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D)
+
+
+def naive_attention(q, k, v, *, q_pos, kv_pos, causal=True, window=None,
+                    chunk=None):
+    """O(S²)-memory oracle for tests."""
+    B, Sq, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    s /= math.sqrt(D)
+    pm = _pair_mask(
+        q_pos[:, None, None, :, None], kv_pos[:, None, None, None, :],
+        causal, window, chunk,
+    )
+    s = jnp.where(pm, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no live key → zeros (matches blockwise l==0 guard)
+    any_live = jnp.any(pm, -1)
+    p = jnp.where(any_live[..., None], p, 0.0)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, D)

@@ -1,0 +1,208 @@
+"""Generalized gated linear attention (chunked, TPU-native).
+
+One engine covers both assigned recurrent families:
+
+- **Mamba2 / SSD** (zamba2-7b): scalar per-head decay  a_t = exp(A·dt_t),
+  q=C_t, k=dt_t·B_t, v=x_t, *inclusive* read  y_t = q_t·S_t.
+- **RWKV6** (rwkv6-3b): per-channel data-dependent decay w_t, *exclusive*
+  read with bonus  y_t = r_t·(S_{t-1} + diag(u) k_t v_tᵀ).
+
+Recurrence (per head; state S ∈ R^{N×P}):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ,   w_t = exp(logw_t) ∈ (0,1]
+
+TPU adaptation: instead of a length-T sequential scan (latency-bound on the
+VPU), training/prefill uses the *chunked* form — an (L×L) masked matmul per
+chunk (MXU work) plus a T/L-length scan carrying the (N×P) state. Chunk size
+is `cfg.scan_chunk` (default 256 = 2 MXU tiles). Cumulative log-decays are
+clamped at −CLAMP to bound exp() in f32; the clamp only binds when the decay
+has already zeroed the contribution (exp(−30) ≈ 1e-13).
+
+A per-step sequential reference (`gla_ref`) is the oracle in tests; decoding
+uses the O(1) `gla_decode_step`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CLAMP = 30.0
+
+
+def _f32(*xs):
+    return tuple(x.astype(jnp.float32) for x in xs)
+
+
+def gla_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,
+    *,
+    chunk: int = 256,
+    inclusive: bool = True,
+    bonus: Optional[jax.Array] = None,
+    initial_state: Optional[jax.Array] = None,
+    scalar_decay: bool = False,
+    decay_floor: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """q,k: (B,T,H,N); v: (B,T,H,P); logw: (B,T,H,N) or (B,T,H) if
+    ``scalar_decay`` → y (B,T,H,P), S (B,H,N,P).
+
+    Numerics: the scalar-decay path (Mamba2/SSD) materializes the pairwise
+    (L,L) within-chunk decay matrix — exponents are clipped to [−CLAMP, 0]
+    *after* pairing, so it is exact to ~e^−30 for any decay strength and any
+    chunk size. The vector-decay path (RWKV6) must factor the decay per
+    channel (a pairwise matrix would be O(L²N)); correctness of the factored
+    exponentials requires in-chunk cumulative log-decay ≥ −CLAMP, enforced
+    by a per-step decay floor of −CLAMP/chunk (use small chunks for
+    strongly-decaying recurrences; rwkv6 config uses chunk 16). The same
+    floor must be applied at decode (``decay_floor`` of gla_decode_step).
+    """
+    B, T, H = q.shape[:3]
+    N = q.shape[3]
+    P = v.shape[-1]
+    out_dtype = v.dtype
+    if T % chunk != 0:
+        pad = chunk - T % chunk
+        zq = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v, logw = zq(q), zq(k), zq(v), zq(logw)
+    Tp = q.shape[1]
+    G, L = Tp // chunk, chunk
+    q, k, v, logw = _f32(q, k, v, logw)
+    logw = jnp.minimum(logw, 0.0)
+    if not scalar_decay:
+        # factored-path floor (length-independent if caller fixes it)
+        floor = decay_floor if decay_floor is not None else -CLAMP / chunk
+        assert floor * chunk >= -CLAMP - 1e-6, (floor, chunk)
+        logw = jnp.maximum(logw, floor)
+
+    def split(x):  # (B,Tp,H,·) -> (G,B,L,H,·)
+        return jnp.moveaxis(x.reshape(B, G, L, *x.shape[2:]), 1, 0)
+
+    qs, ks, vs, ws = split(q), split(k), split(v), split(logw)
+
+    if initial_state is None:
+        S0 = jnp.zeros((B, H, N, P), jnp.float32)
+    else:
+        S0 = initial_state.astype(jnp.float32)
+
+    mask_val = jnp.tril(jnp.ones((L, L), bool), 0 if inclusive else -1)
+
+    def step_scalar(S, inp):
+        qc, kc, vc, wc = inp  # wc: (B,L,H)
+        W = jnp.cumsum(wc, axis=1)  # (B,L,H)
+        Wl = W[:, -1]  # (B,H)
+        Wq = W if inclusive else W - wc
+        # pairwise decay, clipped after pairing → exact
+        D = jnp.exp(jnp.clip(Wq[:, :, None] - W[:, None, :], -CLAMP, 0.0))
+        D = jnp.where(mask_val[None, :, :, None], D, 0.0)  # (B,L,M,H)
+        qk = jnp.einsum("blhn,bmhn->blmh", qc, kc)
+        y = jnp.einsum("blmh,bmhp->blhp", qk * D, vc)
+        y = y + jnp.einsum(
+            "blhn,bhnp->blhp",
+            qc * jnp.exp(jnp.maximum(Wq, -CLAMP))[..., None], S)
+        k_hat = kc * jnp.exp(
+            jnp.clip(Wl[:, None] - W, -CLAMP, 0.0))[..., None]
+        S1 = (jnp.exp(jnp.maximum(Wl, -CLAMP))[..., None, None] * S
+              + jnp.einsum("blhn,blhp->bhnp", k_hat, vc))
+        return S1, y
+
+    def step_vector(S, inp):
+        qc, kc, vc, wc = inp  # wc: (B,L,H,N)
+        W = jnp.cumsum(wc, axis=1)  # ≥ −CLAMP by the floor
+        Wl = W[:, -1]  # (B,H,N)
+        Wq = W if inclusive else W - wc
+        q_t = qc * jnp.exp(Wq)
+        k_t = kc * jnp.exp(-W)  # bounded by e^CLAMP via the floor
+        scores = jnp.einsum("blhn,bmhn->bhlm", q_t, k_t)
+        scores = jnp.where(mask_val[None, None], scores, 0.0)
+        y = jnp.einsum("bhlm,bmhp->blhp", scores, vc)
+        y = y + jnp.einsum("blhn,bhnp->blhp", q_t, S)
+        if bonus is not None:
+            s = jnp.einsum("blhn,hn,blhn->blh", qc,
+                           bonus.astype(jnp.float32), kc)
+            y = y + s[..., None] * vc
+        k_hat = kc * jnp.exp(jnp.clip(Wl[:, None] - W, -CLAMP, 0.0))
+        S1 = (jnp.exp(Wl)[..., None] * S
+              + jnp.einsum("blhn,blhp->bhnp", k_hat, vc))
+        return S1, y
+
+    step = step_scalar if scalar_decay else step_vector
+    S_final, ys = jax.lax.scan(step, S0, (qs, ks, vs, ws))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Tp, H, P)[:, :T]
+    return y.astype(out_dtype), S_final
+
+
+def gla_ref(q, k, v, logw, *, inclusive=True, bonus=None, initial_state=None,
+            decay_floor=None):
+    """Sequential per-step oracle (lax.scan over T). logw: (B,T,H[,N])."""
+    B, T, H, N = q.shape
+    P = v.shape[-1]
+    out_dtype = v.dtype
+    if logw.ndim == 3:  # scalar per-head decay → broadcast over N
+        logw = jnp.broadcast_to(logw[..., None], q.shape)
+    q, k, v, logw = _f32(q, k, v, logw)
+    logw = jnp.minimum(logw, 0.0)
+    if decay_floor is not None:
+        logw = jnp.maximum(logw, decay_floor)
+    S0 = (jnp.zeros((B, H, N, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(S, inp):
+        qt, kt, vt, wt = inp  # (B,H,·)
+        S1 = jnp.exp(wt)[..., None] * S + jnp.einsum("bhn,bhp->bhnp", kt, vt)
+        Sread = S1 if inclusive else S
+        y = jnp.einsum("bhn,bhnp->bhp", qt, Sread)
+        if bonus is not None:
+            s = jnp.einsum("bhn,hn,bhn->bh", qt, bonus.astype(jnp.float32), kt)
+            y = y + s[..., None] * vt
+        return S1, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (q, k, v, logw))
+    S_final, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(out_dtype), S_final
+
+
+def gla_decode_step(state, q, k, v, logw, *, inclusive=True, bonus=None,
+                    decay_floor=None):
+    """One-token decode. q,k: (B,H,N); logw: (B,H[,N]); v: (B,H,P)."""
+    out_dtype = v.dtype
+    if logw.ndim == 2:
+        logw = jnp.broadcast_to(logw[..., None], q.shape)
+    q, k, v, logw = _f32(q, k, v, logw)
+    logw = jnp.minimum(logw, 0.0)
+    if decay_floor is not None:
+        logw = jnp.maximum(logw, decay_floor)
+    S = state.astype(jnp.float32)
+    S1 = jnp.exp(logw)[..., None] * S + jnp.einsum("bhn,bhp->bhnp", k, v)
+    y = jnp.einsum("bhn,bhnp->bhp", q, S1 if inclusive else S)
+    if bonus is not None:
+        s = jnp.einsum("bhn,hn,bhn->bh", q, bonus.astype(jnp.float32), k)
+        y = y + s[..., None] * v
+    return y.astype(out_dtype), S1.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (Mamba front conv), with decode buffer.
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, *, buffer=None):
+    """x: (B,T,C), w: (K,C) depthwise. Returns (y, new_buffer).
+
+    buffer: (B,K-1,C) previous inputs for decode (T small, usually 1).
+    """
+    K = w.shape[0]
+    if buffer is None:
+        ctx = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([buffer.astype(x.dtype), x], axis=1)
+    # y_t = sum_k w[k] * ctx[t + k]
+    T = x.shape[1]
+    y = sum(
+        ctx[:, i : i + T] * w[i].astype(x.dtype) for i in range(K)
+    )
+    new_buffer = ctx[:, -(K - 1):] if K > 1 else None
+    return y, new_buffer

@@ -1,0 +1,141 @@
+"""Parameter specification trees.
+
+Models in this framework are *pure functions* over parameter pytrees. Each
+model builder returns a nested dict of :class:`ParamSpec` leaves (the abstract
+parameter tree) plus apply functions. From the spec tree we can derive
+
+- ``jax.ShapeDtypeStruct`` trees (dry-run lowering, **no allocation**),
+- materialized parameters (``init_tree``), and
+- ``NamedSharding`` trees via logical-axis rules (:mod:`repro.nn.sharding`).
+
+This mirrors how MaxText separates logical axes from physical meshes, without
+depending on flax (everything here is stdlib + jax).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Initializer = Callable[[jax.Array, Sequence[int], Any], jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Initializers (jax.nn.initializers-compatible signatures).
+# ---------------------------------------------------------------------------
+
+def zeros_init(key, shape, dtype):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def normal_init(stddev: float = 0.02) -> Initializer:
+    def init(key, shape, dtype):
+        return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+    return init
+
+
+def fan_in_init(axis: int = -2) -> Initializer:
+    """LeCun-normal style: stddev = 1/sqrt(fan_in along ``axis``)."""
+
+    def init(key, shape, dtype):
+        fan_in = shape[axis] if shape else 1
+        stddev = 1.0 / math.sqrt(max(1, fan_in))
+        return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+    return init
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Abstract description of one parameter tensor.
+
+    ``axes`` holds one *logical axis name* (or None) per dimension; the
+    sharding rules in :mod:`repro.nn.sharding` map logical names to mesh axes.
+    """
+
+    shape: tuple
+    dtype: Any = jnp.bfloat16
+    init: Initializer = fan_in_init()
+    axes: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+        axes = tuple(self.axes) if self.axes else (None,) * len(self.shape)
+        if len(axes) != len(self.shape):
+            raise ValueError(
+                f"axes {axes} rank mismatch with shape {self.shape}"
+            )
+        object.__setattr__(self, "axes", axes)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_leaves(tree):
+    return jax.tree.leaves(tree, is_leaf=is_spec)
+
+
+def tree_map_spec(fn, tree, *rest):
+    return jax.tree.map(fn, tree, *rest, is_leaf=is_spec)
+
+
+def abstract_tree(tree):
+    """ShapeDtypeStruct tree for dry-run lowering. Zero allocation."""
+    return tree_map_spec(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree
+    )
+
+
+def axes_tree(tree):
+    return tree_map_spec(lambda s: s.axes, tree)
+
+
+def param_count(tree) -> int:
+    return sum(s.size for s in spec_leaves(tree))
+
+
+def init_tree(rng: jax.Array, tree):
+    """Materialize a parameter tree (used only for smoke-scale configs)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [s.init(k, s.shape, s.dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Add a leading stacked dimension (for lax.scan over layers)."""
+
+    def stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(
+            shape=(n,) + s.shape,
+            dtype=s.dtype,
+            init=_vmap_init(s.init, n),
+            axes=(axis_name,) + s.axes,
+        )
+
+    return tree_map_spec(stack, spec_tree)
+
+
+def _vmap_init(init: Initializer, n: int) -> Initializer:
+    def stacked(key, shape, dtype):
+        assert shape[0] == n, (shape, n)
+        keys = jax.random.split(key, n)
+        return jax.vmap(lambda k: init(k, shape[1:], dtype))(keys)
+
+    return stacked

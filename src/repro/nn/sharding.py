@@ -1,0 +1,167 @@
+"""Logical-axis sharding rules → physical ``NamedSharding`` trees.
+
+The mapping is MaxText-style: every parameter/activation dimension carries a
+*logical* name ('embed', 'mlp', 'heads', 'vocab', 'expert', 'batch', ...) and a
+rule table maps logical names to mesh axes. Rules are *best effort*: a mesh
+axis is dropped for a given tensor dimension when the dimension size is not
+divisible by the mesh-axis extent (e.g. 8 KV heads on a 16-way 'model' axis →
+replicated). This keeps one rule table valid across all 10 architectures and
+all 4 input shapes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Mapping, Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn.param import ParamSpec, tree_map_spec
+
+MeshAxes = Union[None, str, tuple]
+
+# Default rule table. 'data' doubles as the FSDP axis for parameters
+# (embed/e_dim rows sharded over 'data'), 'model' is tensor parallel.
+DEFAULT_RULES: dict = {
+    # parameter axes
+    "vocab": "model",
+    "embed": "data",          # FSDP: shard the d_model dim of weights
+    "embed_tp": "model",      # used where d_model is the TP-contracting dim
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "conv": None,
+    "state": None,
+    "layers": None,
+    "norm": None,
+    # activation axes
+    "batch": "data",
+    "worker": "pod",
+    "seq": None,
+    "seq_shard": ("data", "model"),
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_expert": "model",
+    "cache_batch": "data",
+    "cache_seq": None,
+    "cache_heads": "model",
+}
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _present(mesh: Mesh, axes: MeshAxes) -> Optional[MeshAxes]:
+    """Filter out mesh axes that don't exist on this mesh (e.g. 'pod')."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.shape else None
+    kept = tuple(a for a in axes if a in mesh.shape)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def physical_spec(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[Mapping[str, MeshAxes]] = None,
+) -> P:
+    """Map logical axes to a PartitionSpec, dropping non-divisible axes.
+
+    A mesh axis may appear at most once in a PartitionSpec; first dimension
+    (left to right) that claims an axis wins.
+    """
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        axes = _present(mesh, rules.get(name)) if name else None
+        if axes is None:
+            out.append(None)
+            continue
+        cand = (axes,) if isinstance(axes, str) else tuple(axes)
+        cand = tuple(a for a in cand if a not in used)
+        # greedily keep the prefix of axes whose product divides dim
+        kept = []
+        prod = 1
+        for a in cand:
+            if dim % (prod * mesh.shape[a]) == 0:
+                kept.append(a)
+                prod *= mesh.shape[a]
+        if not kept:
+            out.append(None)
+            continue
+        used.update(kept)
+        out.append(tuple(kept) if len(kept) > 1 else kept[0])
+    # trim trailing Nones (cosmetic)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(
+    spec: ParamSpec, mesh: Mesh, rules=None
+) -> NamedSharding:
+    return NamedSharding(mesh, physical_spec(spec.shape, spec.axes, mesh, rules))
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules=None):
+    """NamedSharding tree matching a ParamSpec tree."""
+    return tree_map_spec(lambda s: named_sharding(s, mesh, rules), spec_tree)
+
+
+def tree_pspecs(spec_tree, mesh: Mesh, rules=None):
+    return tree_map_spec(
+        lambda s: physical_spec(s.shape, s.axes, mesh, rules), spec_tree
+    )
+
+
+def logical_constraint(x: jax.Array, logical_axes, mesh: Optional[Mesh] = None,
+                       rules=None) -> jax.Array:
+    """with_sharding_constraint on activations via logical names.
+
+    No-op when no mesh is active (CPU unit tests).
+    """
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = physical_spec(x.shape, logical_axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def batch_spec(global_batch: int, mesh: Mesh, extra=()) -> P:
+    """Shard a batch dim over as many of ('pod','data') as divide it."""
+    axes = []
+    prod = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape and global_batch % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    lead = tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+    return P(lead, *extra)

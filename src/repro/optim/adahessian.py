@@ -1,0 +1,86 @@
+"""AdaHessian (Yao et al., AAAI 2021) — the paper's worker-local optimizer.
+
+Three components (paper §IV-B):
+1. Hutchinson diagonal-Hessian estimate (see :mod:`repro.optim.hutchinson`);
+   arrives via ``extras["hess_diag"]``.
+2. Spatial averaging of the diagonal over neighbouring parameters (blocks of
+   ``spatial_block`` along the last axis) to reduce variance.
+3. Adam-style moments with the gradient second moment replaced by the
+   (spatially averaged) Hessian diagonal, optionally raised to
+   ``hessian_power``.
+
+The fused elementwise update also exists as a Pallas TPU kernel
+(``repro.kernels.adahessian``); this module is the jnp path / oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.optim.base import Optimizer, tree_zeros_f32
+
+
+def spatial_average(h: jax.Array, block: int) -> jax.Array:
+    """Average |h| within blocks along the last axis (AdaHessian eq. 9).
+
+    For tensors whose last dim is smaller than ``block`` (biases, scales),
+    averages the whole axis. Conv-style kernels average the leading spatial
+    axes naturally since they fold into the last-axis blocks after reshape.
+    """
+    h = jnp.abs(h.astype(jnp.float32))
+    if h.ndim == 0:
+        return h
+    d = h.shape[-1]
+    b = min(block, d)
+    if d % b != 0:
+        b = 1
+        for cand in range(min(block, d), 0, -1):
+            if d % cand == 0:
+                b = cand
+                break
+    shape = h.shape[:-1] + (d // b, b)
+    hb = h.reshape(shape)
+    return jnp.broadcast_to(
+        jnp.mean(hb, axis=-1, keepdims=True), shape).reshape(h.shape)
+
+
+def adahessian(cfg: OptimizerConfig) -> Optimizer:
+    b1, b2 = cfg.betas
+    k = cfg.hessian_power
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "m": tree_zeros_f32(params), "v": tree_zeros_f32(params)}
+
+    def update(grads, state, params=None, extras=None):
+        assert extras is not None and "hess_diag" in extras, (
+            "adahessian requires extras['hess_diag'] (Hutchinson estimate)")
+        t = state["count"] + 1
+        hs = jax.tree.map(
+            lambda h: spatial_average(h, cfg.spatial_block),
+            extras["hess_diag"])
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, h: b2 * v_ + (1 - b2) * jnp.square(h), state["v"], hs)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        denom_pow = k / 2.0
+
+        def upd_fn(m_, v_):
+            denom = jnp.power(v_ / bc2 + 1e-30, denom_pow) + cfg.eps
+            u = -cfg.lr * (m_ / bc1) / denom
+            if cfg.weight_decay:
+                return u  # decoupled decay applied by caller if needed
+            return u
+
+        upd = jax.tree.map(upd_fn, m, v)
+        if cfg.weight_decay and params is not None:
+            upd = jax.tree.map(
+                lambda u, p: u - cfg.lr * cfg.weight_decay * p.astype(
+                    jnp.float32), upd, params)
+        return upd, {"count": t, "m": m, "v": v}
+
+    return Optimizer(init, update, needs_hessian=True)

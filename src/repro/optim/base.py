@@ -1,0 +1,51 @@
+"""Optimizer interface (optax-like, built from scratch — no optax dependency).
+
+An optimizer is a pair of pure functions:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, extras)
+
+``extras`` carries optional second-order information (the Hutchinson Hessian
+diagonal for AdaHessian). ``apply_updates`` adds updates to params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, extras) -> (updates, state)
+    needs_hessian: bool = False
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(
+            p.dtype),
+        params, updates)
+
+
+def tree_zeros_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    from repro.optim import adahessian, firstorder
+
+    if cfg.name == "sgd":
+        return firstorder.sgd(cfg)
+    if cfg.name == "momentum":
+        return firstorder.momentum(cfg)
+    if cfg.name == "adam":
+        return firstorder.adam(cfg)
+    if cfg.name == "adahessian":
+        return adahessian.adahessian(cfg)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

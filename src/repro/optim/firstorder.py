@@ -1,0 +1,60 @@
+"""First-order optimizers: SGD, Momentum (paper's EAMSGD local rule), Adam."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.optim.base import Optimizer, tree_zeros_f32
+
+
+def sgd(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None, extras=None):
+        updates = jax.tree.map(lambda g: -cfg.lr * g.astype(jnp.float32),
+                               grads)
+        return updates, {"count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32), "m": tree_zeros_f32(params)}
+
+    def update(grads, state, params=None, extras=None):
+        m = jax.tree.map(
+            lambda v, g: cfg.momentum * v - cfg.lr * g.astype(jnp.float32),
+            state["m"], grads)
+        return m, {"count": state["count"] + 1, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(cfg: OptimizerConfig) -> Optimizer:
+    b1, b2 = cfg.betas
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "m": tree_zeros_f32(params), "v": tree_zeros_f32(params)}
+
+    def update(grads, state, params=None, extras=None):
+        t = state["count"] + 1
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(
+                g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m_, v_: -cfg.lr * (m_ / bc1) / (
+                jnp.sqrt(v_ / bc2) + cfg.eps),
+            m, v)
+        return upd, {"count": t, "m": m, "v": v}
+
+    return Optimizer(init, update)

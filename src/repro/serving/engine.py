@@ -1,0 +1,53 @@
+"""Batched serving engine: prefill + greedy decode over a KV cache.
+
+Small but real: continuous token-level loop with jitted prefill/decode
+steps, per-request lengths, and EOS short-circuiting on host. Used by
+examples/serve_batch.py and the decode smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(eq=False)
+class ServeEngine:
+    model: object
+    params: object
+    max_len: int = 256
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, b, c: self.model.prefill(p, b, c))
+        self._decode = jax.jit(
+            lambda p, b, c, i: self.model.decode_step(p, b, c, i))
+
+    def generate(self, prompts: np.ndarray, *, steps: int = 32,
+                 eos_id: Optional[int] = None, extra_batch=None):
+        """prompts: (B, S0) int32 → (B, steps) generated tokens (greedy)."""
+        B, S0 = prompts.shape
+        cache = self.model.init_cache(B, self.max_len)
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extra_batch:
+            batch.update(extra_batch)
+        logits, cache = self._prefill(self.params, batch, cache)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = [np.asarray(tok)]
+        finished = np.zeros(B, bool)
+        index = S0
+        for _ in range(steps - 1):
+            logits, cache = self._decode(
+                self.params, {"tokens": tok}, cache, index)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            t_np = np.asarray(tok)
+            out.append(t_np)
+            index += 1
+            if eos_id is not None:
+                finished |= (t_np[:, 0] == eos_id)
+                if finished.all() or index >= self.max_len:
+                    break
+        return np.concatenate(out, axis=1)

@@ -1,0 +1,157 @@
+"""jit-able train / serve steps + sharding trees for any model.
+
+``make_train_step`` builds the paper-faithful worker-local step: gradient +
+(for AdaHessian) the Hutchinson HVP + fused optimizer update. The elastic
+round step (local phase × τ + dynamic-weight sync) lives in
+``repro.core.coordinator`` and is shared between the CPU simulation and the
+multi-pod production path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, ShapeConfig,
+                                TrainConfig)
+from repro.nn.param import ParamSpec, abstract_tree, tree_map_spec
+from repro.nn.sharding import physical_spec, tree_pspecs
+from repro.optim.base import apply_updates, make_optimizer
+from repro.optim.hutchinson import hessian_diag
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(model, opt_cfg: OptimizerConfig,
+                    train_cfg: Optional[TrainConfig] = None):
+    opt = make_optimizer(opt_cfg)
+    remat = bool(train_cfg and train_cfg.remat != "none")
+
+    def train_step(state, batch, rng):
+        params = state["params"]
+        loss_fn = lambda p: model.loss(p, batch, remat=remat)[0]
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        extras = None
+        if opt.needs_hessian:
+            extras = {"hess_diag": hessian_diag(
+                jax.grad(loss_fn), params, rng,
+                opt_cfg.hutchinson_samples)}
+        updates, opt_state = opt.update(grads, state["opt"], params, extras)
+        params = apply_updates(params, updates)
+        return {"params": params, "opt": opt_state,
+                "step": state["step"] + 1}, {"loss": loss}
+
+    return train_step
+
+
+def make_train_step_stale_hessian(model, opt_cfg: OptimizerConfig,
+                                  train_cfg: Optional[TrainConfig] = None):
+    """Beyond-paper §Perf variant: the off-refresh step of the lazy-Hessian
+    schedule (no Hutchinson HVP; v is reused, only m/params advance).
+
+    Amortized cost with refresh period h:
+        cost = (1/h)·cost(train_step) + (1−1/h)·cost(this step)
+    Both steps are lowered separately in the dry-run; EXPERIMENTS.md §Perf
+    combines them analytically.
+    """
+    opt = make_optimizer(opt_cfg)
+    remat = bool(train_cfg and train_cfg.remat != "none")
+    b1, _ = opt_cfg.betas
+
+    def train_step(state, batch, rng):
+        del rng
+        params = state["params"]
+        loss_fn = lambda p: model.loss(p, batch, remat=remat)[0]
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        st = state["opt"]
+        t = st["count"] + 1
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            st["m"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - opt_cfg.betas[1] ** t.astype(jnp.float32)
+        k = opt_cfg.hessian_power / 2.0
+        upd = jax.tree.map(
+            lambda m_, v_: -opt_cfg.lr * (m_ / bc1)
+            / (jnp.power(v_ / bc2 + 1e-30, k) + opt_cfg.eps),
+            m, st["v"])
+        params = apply_updates(params, upd)
+        return {"params": params,
+                "opt": {"count": t, "m": m, "v": st["v"]},
+                "step": state["step"] + 1}, {"loss": loss}
+
+    return train_step
+
+
+def init_train_state(model, opt_cfg: OptimizerConfig, rng):
+    from repro.nn.param import init_tree
+
+    opt = make_optimizer(opt_cfg)
+    params = init_tree(rng, model.spec)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(model, opt_cfg: OptimizerConfig):
+    """ShapeDtypeStruct train state — dry-run only, no allocation."""
+    params = abstract_tree(model.spec)
+    f32 = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+    opt: dict = {"count": jax.ShapeDtypeStruct((), jnp.int32)}
+    if opt_cfg.name in ("momentum", "adam", "adahessian"):
+        opt["m"] = f32(params)
+    if opt_cfg.name in ("adam", "adahessian"):
+        opt["v"] = f32(params)
+    return {"params": params, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def make_serve_step(model, kind: str = "decode"):
+    if kind == "prefill":
+        def prefill_step(params, batch, cache):
+            logits, cache = model.prefill(params, batch, cache)
+            return jnp.argmax(logits[:, -1], axis=-1), cache
+
+        return prefill_step
+
+    def serve_step(params, batch, cache, index):
+        logits, cache = model.decode_step(params, batch, cache, index)
+        return jnp.argmax(logits[:, -1], axis=-1), cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+def params_pspecs(model, mesh: Mesh, rules=None):
+    return tree_pspecs(model.spec, mesh, rules)
+
+
+def train_state_pspecs(model, opt_cfg: OptimizerConfig, mesh: Mesh,
+                       rules=None):
+    p = params_pspecs(model, mesh, rules)
+    opt: dict = {"count": P()}
+    if opt_cfg.name in ("momentum", "adam", "adahessian"):
+        opt["m"] = p
+    if opt_cfg.name in ("adam", "adahessian"):
+        opt["v"] = p
+    return {"params": p, "opt": opt, "step": P()}
+
+
+def batch_pspecs(specs: dict, mesh: Mesh, rules=None):
+    return {
+        name: physical_spec(s.shape, s.axes, mesh, rules)
+        for name, s in specs.items()
+    }
+
+
+def cache_pspecs(model, batch_size: int, cache_len: int, mesh: Mesh,
+                 rules=None):
+    return tree_pspecs(model.cache_spec(batch_size, cache_len), mesh, rules)

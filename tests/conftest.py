@@ -1,0 +1,13 @@
+import os
+import sys
+
+# Tests see the default single CPU device (the dry-run sets its own flags in
+# a subprocess). Keep plenty of hypothesis examples but bound runtime.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

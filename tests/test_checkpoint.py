@@ -1,0 +1,53 @@
+"""Checkpoint roundtrip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+
+
+def _tree():
+    return {
+        "params": {
+            "w": jnp.arange(12.0).reshape(3, 4),
+            "b": jnp.ones((4,), jnp.bfloat16),
+            "nested": {"scale": jnp.asarray(2.5)},
+        },
+        "opt": {"count": jnp.asarray(7, jnp.int32),
+                "m": [jnp.zeros(3), jnp.ones(2)]},
+    }
+
+
+def test_roundtrip_structure_and_values(tmp_path):
+    t = _tree()
+    checkpoint.save(str(tmp_path / "ck"), t, metadata={"round": 3})
+    restored, meta = checkpoint.restore(str(tmp_path / "ck"), like=t)
+    assert meta["round"] == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_restore_without_like(tmp_path):
+    t = _tree()
+    checkpoint.save(str(tmp_path / "ck"), t)
+    restored, _ = checkpoint.restore(str(tmp_path / "ck"))
+    np.testing.assert_allclose(restored["params"]["w"], t["params"]["w"])
+    assert isinstance(restored["opt"]["m"], list)
+    assert len(restored["opt"]["m"]) == 2
+
+
+def test_model_params_roundtrip(tmp_path):
+    from repro.configs.base import get_config
+    from repro.models.registry import build_model
+    from repro.nn.param import init_tree
+
+    model = build_model(get_config("stablelm_3b", smoke=True))
+    p = init_tree(jax.random.key(0), model.spec)
+    checkpoint.save(str(tmp_path / "ck"), p)
+    r, _ = checkpoint.restore(str(tmp_path / "ck"), like=p)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

@@ -1,0 +1,121 @@
+"""Coordinator semantics: EASGD fixed-α equivalence, failure suppression,
+dynamic-weight reaction, u-history bookkeeping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+from repro.core.coordinator import ElasticTrainer, tree_stack_copies
+from repro.core.elastic import elastic_update
+from repro.models.registry import build_model
+
+
+def _trainer(k=2, **kw):
+    model = build_model(get_config("paper_cnn"))
+    defaults = dict(num_workers=k, tau=1, alpha=0.1, dynamic=False)
+    defaults.update(kw)
+    return ElasticTrainer(model, OptimizerConfig(name="sgd", lr=0.01),
+                          ElasticConfig(**defaults))
+
+
+def _get(workers, i):
+    return jax.tree.map(lambda x: x[i], workers)
+
+
+def test_comm_phase_fixed_alpha_matches_manual():
+    tr = _trainer(k=2)
+    state = tr.init_state(jax.random.key(0))
+    # desync the workers so the elastic pull is non-trivial
+    state["workers"] = jax.tree.map(
+        lambda x: x + jax.random.normal(jax.random.key(1), x.shape,
+                                        x.dtype) * 0.1, state["workers"])
+    fail = jnp.zeros(2, bool)
+    new, m = tr.comm_phase(state, fail)
+    # manual sequential EASGD with α=0.1
+    master = state["master"]
+    for i in range(2):
+        w_i = _get(state["workers"], i)
+        w_new, master = elastic_update(w_i, master, 0.1, 0.1)
+        got = _get(new["workers"], i)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(w_new)):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(new["master"]), jax.tree.leaves(master)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_failed_worker_exchanges_nothing():
+    tr = _trainer(k=2)
+    state = tr.init_state(jax.random.key(0))
+    state["workers"] = jax.tree.map(
+        lambda x: x + 0.5, state["workers"])  # force distance
+    fail = jnp.asarray([True, False])
+    new, m = tr.comm_phase(state, fail)
+    # worker 0 params unchanged; master got no pull from worker 0
+    w0_before = _get(state["workers"], 0)
+    w0_after = _get(new["workers"], 0)
+    for a, b in zip(jax.tree.leaves(w0_before), jax.tree.leaves(w0_after)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(m["h1"][0]) == 0.0 and float(m["h2"][0]) == 0.0
+    assert float(m["h2"][1]) == pytest.approx(0.1)
+    # but its u-history still advanced (worker-worker estimation, §V-B)
+    assert float(new["u_hist"][0, -1]) != float(state["u_hist"][0, -1])
+
+
+def test_dynamic_weight_reacts_to_shrinking_distance():
+    """Post-failure recovery: distance dropping fast ⇒ negative score ⇒
+    h1→1 (snap back), h2→0 (master protects itself) — paper §V-B."""
+    tr = _trainer(k=1, dynamic=True, score_k=-0.05)
+    state = tr.init_state(jax.random.key(0))
+    # history says the worker was far; now it is very close again → the
+    # appended u drops sharply (recovery signature)
+    state["u_hist"] = jnp.asarray([[6.0, 5.0, 4.0, 3.0, 2.0]])
+    state["workers"] = jax.tree.map(lambda x: x + 1e-4, state["workers"])
+    new, m = tr.comm_phase(state, jnp.zeros(1, bool))
+    assert float(m["score"][0]) < -0.05
+    assert float(m["h1"][0]) == pytest.approx(1.0)
+    assert float(m["h2"][0]) == pytest.approx(0.0)
+
+
+def test_dynamic_weight_healthy_is_easgd():
+    tr = _trainer(k=1, dynamic=True)
+    state = tr.init_state(jax.random.key(0))
+    state["u_hist"] = jnp.asarray([[0.0, 0.01, 0.02, 0.03, 0.04]])
+    # keep the real u from moving the trend negative: tiny drift
+    state["workers"] = jax.tree.map(
+        lambda x: x + 1.0, state["workers"])  # large distance → u rises
+    new, m = tr.comm_phase(state, jnp.zeros(1, bool))
+    assert float(m["score"][0]) > 0
+    assert float(m["h1"][0]) == pytest.approx(0.1)
+    assert float(m["h2"][0]) == pytest.approx(0.1)
+
+
+def test_round_counter_and_hist_roll():
+    tr = _trainer(k=2)
+    state = tr.init_state(jax.random.key(0))
+    new, _ = tr.comm_phase(state, jnp.zeros(2, bool))
+    assert int(new["round"]) == 1
+    assert new["u_hist"].shape == (2, 5)
+
+
+def test_local_phase_trains_each_worker_independently():
+    tr = _trainer(k=2, tau=2)
+    state = tr.init_state(jax.random.key(0))
+    b = {"images": jax.random.normal(jax.random.key(1), (2, 2, 8, 28, 28, 1)),
+         "labels": jnp.zeros((2, 2, 8), jnp.int32)}
+    new, loss = tr.local_phase(state, b, jax.random.key(2))
+    assert bool(jnp.isfinite(loss))
+    # workers diverge (different data), master untouched
+    w0 = jax.tree.leaves(_get(new["workers"], 0))
+    w1 = jax.tree.leaves(_get(new["workers"], 1))
+    assert any(float(jnp.abs(a - b).max()) > 0 for a, b in zip(w0, w1))
+    for a, b in zip(jax.tree.leaves(new["master"]),
+                    jax.tree.leaves(state["master"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tree_stack_copies():
+    t = {"a": jnp.arange(3.0)}
+    s = tree_stack_copies(t, 4)
+    assert s["a"].shape == (4, 3)
+    np.testing.assert_allclose(s["a"][2], t["a"])

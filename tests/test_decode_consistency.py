@@ -1,0 +1,75 @@
+"""Prefill+decode == full forward, across ALL family types (the dense/rwkv/
+hybrid cases live in test_models; this file covers enc-dec, VLM and MoE)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.registry import build_model
+from repro.nn.param import init_tree
+
+
+def test_encdec_prefill_decode_matches_forward():
+    cfg = get_config("seamless_m4t_large_v2", smoke=True)
+    model = build_model(cfg)
+    params = init_tree(jax.random.key(0), model.spec)
+    T, Se = 8, 16
+    src = jax.random.normal(jax.random.key(1), (2, Se, cfg.d_model),
+                            jnp.float32)
+    toks = jax.random.randint(jax.random.key(2), (2, T), 0, cfg.vocab_size,
+                              jnp.int32)
+    full, _ = model.forward(params, {"src": src, "tokens": toks})
+    cache = model.init_cache(2, T)
+    # enc_len must match the cache's cross-KV slot
+    cache = model.init_cache(2, T)
+    se = model.enc_len(T)
+    src_fit = jax.random.normal(jax.random.key(1), (2, se, cfg.d_model),
+                                jnp.float32)
+    full, _ = model.forward(params, {"src": src_fit, "tokens": toks})
+    pre, cache = model.prefill(params, {"src": src_fit,
+                                        "tokens": toks[:, :T - 1]}, cache)
+    step, _ = model.decode_step(params, {"tokens": toks[:, T - 1:]}, cache,
+                                T - 1)
+    np.testing.assert_allclose(np.asarray(step[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_vlm_prefill_decode_matches_forward():
+    cfg = get_config("qwen2_vl_7b", smoke=True)
+    model = build_model(cfg)
+    params = init_tree(jax.random.key(0), model.spec)
+    Np, Tt = cfg.num_patch_tokens, 8
+    patches = jax.random.normal(jax.random.key(1), (2, Np, cfg.d_model),
+                                jnp.bfloat16)
+    toks = jax.random.randint(jax.random.key(2), (2, Tt), 0, cfg.vocab_size,
+                              jnp.int32)
+    full, _ = model.forward(params, {"patches": patches, "tokens": toks})
+    S = Np + Tt
+    cache = model.init_cache(2, S)
+    pre, cache = model.prefill(
+        params, {"patches": patches, "tokens": toks[:, :Tt - 1]}, cache)
+    step, _ = model.decode_step(params, {"tokens": toks[:, Tt - 1:]}, cache,
+                                S - 1)
+    np.testing.assert_allclose(np.asarray(step[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=0.06, atol=0.06)
+
+
+@pytest.mark.parametrize("arch", ["mixtral_8x22b", "moonshot_v1_16b_a3b"])
+def test_moe_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch, smoke=True).replace(capacity_factor=8.0)
+    model = build_model(cfg)
+    params = init_tree(jax.random.key(0), model.spec)
+    T = 8
+    toks = jax.random.randint(jax.random.key(1), (2, T), 0, cfg.vocab_size,
+                              jnp.int32)
+    full, _ = model.forward(params, {"tokens": toks})
+    cache = model.init_cache(2, T)
+    pre, cache = model.prefill(params, {"tokens": toks[:, :T - 1]}, cache)
+    step, _ = model.decode_step(params, {"tokens": toks[:, T - 1:]}, cache,
+                                T - 1)
+    np.testing.assert_allclose(np.asarray(step[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=0.06, atol=0.06)

@@ -1,0 +1,104 @@
+"""Property + unit tests for the paper's dynamic weighting (§V-B)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.configs.base import ElasticConfig
+from repro.core import dynamic_weight as dw
+
+ALPHAS = st.floats(0.01, 0.9)
+KS = st.floats(-5.0, -1e-3)
+SCORES = st.floats(-10.0, 10.0)
+
+
+@given(a=SCORES, alpha=ALPHAS, k=KS)
+def test_h1_bounds_and_regions(a, alpha, k):
+    v = float(dw.h1(a, alpha, k))
+    assert alpha - 1e-6 <= v <= 1.0 + 1e-6
+    if a < k:
+        assert v == pytest.approx(1.0)
+    if a > 0:
+        assert v == pytest.approx(alpha)
+
+
+@given(a=SCORES, alpha=ALPHAS, k=KS)
+def test_h2_bounds_and_regions(a, alpha, k):
+    v = float(dw.h2(a, alpha, k))
+    assert -1e-6 <= v <= alpha + 1e-6
+    if a < k:
+        assert v == pytest.approx(0.0)
+    if a > 0:
+        assert v == pytest.approx(alpha)
+
+
+@given(alpha=ALPHAS, k=KS)
+def test_h_continuity_at_knots(alpha, k):
+    eps = 1e-6 * max(1.0, abs(k))
+    for h in (dw.h1, dw.h2):
+        assert float(h(k - eps, alpha, k)) == pytest.approx(
+            float(h(k + eps, alpha, k)), abs=1e-3)
+        assert float(h(-eps, alpha, k)) == pytest.approx(
+            float(h(eps, alpha, k)), abs=1e-3)
+
+
+@given(alpha=ALPHAS, k=KS, a1=st.floats(-4, 0), a2=st.floats(-4, 0))
+def test_h1_decreasing_h2_increasing_on_mid(alpha, k, a1, a2):
+    lo, hi = min(a1, a2), max(a1, a2)
+    assert float(dw.h1(lo, alpha, k)) >= float(dw.h1(hi, alpha, k)) - 1e-6
+    assert float(dw.h2(lo, alpha, k)) <= float(dw.h2(hi, alpha, k)) + 1e-6
+
+
+def test_healthy_worker_recovers_easgd():
+    """a > 0 (paper: healthy) → exactly fixed-α EASGD."""
+    cfg = ElasticConfig(alpha=0.1)
+    w1, w2 = dw.weights_for(cfg, jnp.asarray(0.02))
+    assert float(w1) == pytest.approx(0.1)
+    assert float(w2) == pytest.approx(0.1)
+
+
+def test_failed_worker_limits():
+    cfg = ElasticConfig(alpha=0.1, score_k=-0.05)
+    w1, w2 = dw.weights_for(cfg, jnp.asarray(-1.0))
+    assert float(w1) == pytest.approx(1.0)   # snap to master
+    assert float(w2) == pytest.approx(0.0)   # master ignores
+
+
+def test_raw_score_weights_newest_most():
+    hist_new_drop = jnp.asarray([0.0, 0.0, 0.0, 0.0, -1.0])
+    hist_old_drop = jnp.asarray([1.0, 0.0, 0.0, 0.0, 0.0])
+    c = (0.5, 0.25, 0.15, 0.10)
+    a_new = float(dw.raw_score(hist_new_drop, c))
+    a_old = float(dw.raw_score(hist_old_drop, c))
+    assert a_new < a_old < 0
+    assert abs(a_new) > abs(a_old)
+
+
+@given(st.lists(st.floats(-5, 5), min_size=5, max_size=5))
+def test_raw_score_zero_for_constant_history(h):
+    hist = jnp.full((5,), h[0])
+    assert float(dw.raw_score(hist, (0.5, 0.25, 0.15, 0.1))) == pytest.approx(
+        0.0, abs=1e-5)
+
+
+def test_push_history_rolls():
+    hist = jnp.asarray([1.0, 2.0, 3.0])
+    out = dw.push_history(hist, jnp.asarray(4.0))
+    np.testing.assert_allclose(out, [2.0, 3.0, 4.0])
+
+
+def test_log_distance_matches_manual():
+    w = {"a": jnp.asarray([3.0, 0.0]), "b": jnp.asarray(4.0)}
+    m = {"a": jnp.asarray([0.0, 0.0]), "b": jnp.asarray(0.0)}
+    assert float(dw.log_distance(w, m)) == pytest.approx(np.log(5.0), abs=1e-5)
+
+
+def test_oracle_mode():
+    cfg = ElasticConfig(alpha=0.1, oracle=True)
+    w1, w2 = dw.weights_for(cfg, jnp.asarray(0.0),
+                            failed_recently=jnp.asarray(True))
+    assert float(w1) == 1.0 and float(w2) == 0.0
+    w1, w2 = dw.weights_for(cfg, jnp.asarray(0.0),
+                            failed_recently=jnp.asarray(False))
+    assert float(w1) == pytest.approx(0.1)
+    assert float(w2) == pytest.approx(0.1)

@@ -1,0 +1,44 @@
+"""Launcher CLIs: train.py (plain + elastic) and serve.py smoke runs."""
+import pytest
+
+from repro.launch import serve as serve_cli
+from repro.launch import train as train_cli
+
+
+@pytest.mark.slow
+def test_train_cli_elastic_cnn(capsys):
+    train_cli.main([
+        "--arch", "paper-cnn", "--rounds", "2", "--workers", "2",
+        "--tau", "1", "--batch-size", "16"])
+    out = capsys.readouterr().out
+    assert "round 1" in out and "score=" in out
+
+
+@pytest.mark.slow
+def test_train_cli_plain_lm(capsys):
+    train_cli.main([
+        "--arch", "qwen3-4b", "--smoke", "--plain", "--rounds", "2",
+        "--batch-size", "2", "--seq-len", "32"])
+    out = capsys.readouterr().out
+    assert "step 1" in out
+
+
+@pytest.mark.slow
+def test_serve_cli(capsys):
+    serve_cli.main(["--arch", "stablelm-3b", "--batch", "2",
+                    "--prompt-len", "8", "--steps", "4"])
+    out = capsys.readouterr().out
+    assert "tok/s" in out
+
+
+@pytest.mark.slow
+def test_train_cli_checkpoint_roundtrip(tmp_path, capsys):
+    path = str(tmp_path / "ck")
+    train_cli.main([
+        "--arch", "paper-cnn", "--rounds", "1", "--workers", "2",
+        "--batch-size", "8", "--save", path])
+    from repro.checkpoint import checkpoint
+
+    tree, meta = checkpoint.restore(path)
+    assert meta["rounds"] == 1
+    assert "conv1" in tree

@@ -1,0 +1,48 @@
+"""Property tests for the data-overlap partition (paper §V-A)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.overlap import overlap_partition, worker_datasets
+
+
+@given(n=st.integers(50, 2000), k=st.integers(1, 8),
+       r=st.floats(0.0, 0.6), seed=st.integers(0, 100))
+def test_partition_invariants(n, k, r, seed):
+    overlap, uniques = overlap_partition(n, k, r, seed)
+    o = int(round(r * n))
+    assert len(overlap) == o
+    per = (n - o) // k
+    # unique shards are disjoint, correctly sized, and disjoint from overlap
+    all_u = np.concatenate(uniques) if k else np.array([])
+    assert len(set(all_u.tolist())) == len(all_u)
+    assert set(all_u.tolist()).isdisjoint(set(overlap.tolist()))
+    for s in uniques:
+        assert len(s) == per
+    # everything is a valid index
+    assert all_u.max(initial=-1) < n and overlap.max(initial=-1) < n
+
+
+@given(n=st.integers(100, 1000), k=st.integers(2, 8),
+       r=st.floats(0.05, 0.5), seed=st.integers(0, 20))
+def test_worker_datasets_shared_fraction(n, k, r, seed):
+    ds = worker_datasets(n, k, r, seed)
+    o = int(round(r * n))
+    sets = [set(d.tolist()) for d in ds]
+    shared = set.intersection(*sets)
+    # the shared subset is exactly the overlap O
+    assert len(shared) == o
+    for d in ds:
+        assert len(d) == o + (n - o) // k
+
+
+def test_partition_deterministic():
+    a = worker_datasets(500, 4, 0.25, seed=3)
+    b = worker_datasets(500, 4, 0.25, seed=3)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_invalid_ratio_raises():
+    with pytest.raises(ValueError):
+        overlap_partition(100, 4, 1.0)

@@ -1,0 +1,74 @@
+"""End-to-end behaviour tests for the paper's system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+from repro.core.coordinator import ElasticTrainer
+from repro.data.pipeline import WorkerBatcher
+from repro.data.synthetic import SyntheticImages
+from repro.models.registry import build_model
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return SyntheticImages(n=1200, n_test=300, seed=0)
+
+
+def _run(ds, method_kw, opt="adahessian", rounds=6, k=2, tau=1, seed=0,
+         fail=None):
+    model = build_model(get_config("paper_cnn"))
+    ecfg = ElasticConfig(num_workers=k, tau=tau, alpha=0.1,
+                         overlap_ratio=0.25, **method_kw)
+    tr = ElasticTrainer(model, OptimizerConfig(name=opt, lr=0.01), ecfg)
+    state = tr.init_state(jax.random.key(seed))
+    wb = WorkerBatcher(ds.images, ds.labels, ecfg, batch_size=32, seed=seed)
+    test = {k2: jnp.asarray(v) for k2, v in ds.test_batch().items()}
+    acc0 = float(tr.master_accuracy(state, test))
+    for r in range(rounds):
+        batches = {k2: jnp.asarray(v) for k2, v in wb.round_batches().items()}
+        fm = jnp.zeros(k, bool) if fail is None else jnp.asarray(fail[r])
+        state, m = tr.round_step(state, batches, jax.random.key(r), fm,
+                                 jnp.zeros(k, bool))
+    return acc0, float(tr.master_accuracy(state, test)), state, m
+
+
+def test_elastic_training_improves_master(ds):
+    acc0, acc1, _, m = _run(ds, dict(dynamic=False), rounds=6)
+    assert acc1 > acc0 + 0.1, (acc0, acc1)
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+def test_dynamic_training_improves_master(ds):
+    acc0, acc1, state, m = _run(ds, dict(dynamic=True), rounds=6)
+    assert acc1 > acc0 + 0.1
+    # healthy training: dynamic weights stay near α (EASGD regime)
+    assert float(m["h2"].max()) <= 0.1 + 1e-5
+
+
+def test_training_survives_failures(ds):
+    rng = np.random.default_rng(0)
+    fail = rng.random((6, 2)) < 0.34
+    fail[-1] = False  # final syncs happen
+    acc0, acc1, _, _ = _run(ds, dict(dynamic=True), rounds=6, fail=fail)
+    assert acc1 > acc0 + 0.08
+
+
+def test_master_protected_during_recovery(ds):
+    """Post-outage recovery: the distance history collapses, the score goes
+    negative, and the master must take (almost) nothing from that worker
+    while the worker is snapped back (paper §V-B intent)."""
+    model = build_model(get_config("paper_cnn"))
+    ecfg = ElasticConfig(num_workers=2, tau=1, alpha=0.1, dynamic=True)
+    tr = ElasticTrainer(model, OptimizerConfig(name="sgd", lr=0.01), ecfg)
+    state = tr.init_state(jax.random.key(0))
+    # worker 0 was far for several rounds (outage) and is now nearly back
+    state["u_hist"] = state["u_hist"].at[0].set(
+        jnp.asarray([6.0, 5.0, 4.0, 3.0, 2.0]))
+    state["workers"] = jax.tree.map(
+        lambda x: x.at[0].add(1e-4), state["workers"])
+    new, m = tr.comm_phase(state, jnp.zeros(2, bool))
+    assert float(m["score"][0]) < -0.05
+    assert float(m["h2"][0]) < 0.02  # master takes (almost) nothing
+    assert float(m["h1"][0]) > 0.9   # worker snapped back to master
