@@ -16,6 +16,45 @@ def _time(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6  # µs
 
 
+def bench_comm_modes(ks=(4, 8, 16, 32), n=1 << 14):
+    """Sequential-scan vs fused-batched communication phase, sweeping the
+    worker axis. Runs the real ``ElasticTrainer.comm_phase`` on a synthetic
+    parameter tree (n floats/worker) — the sequential scan is k serially
+    dependent score+update steps, so its time grows ~linearly in k, while
+    fused is one batched scoring pass plus one batched update whose time
+    should grow sublinearly in k."""
+    from repro.configs.base import ElasticConfig, OptimizerConfig
+    from repro.core.coordinator import ElasticTrainer
+
+    rows, times = [], {}
+    for k in ks:
+        key = jax.random.key(k)
+        state = {
+            "workers": {"w": jax.random.normal(key, (k, n))},
+            "master": {"w": jnp.zeros((n,))},
+            "u_hist": jnp.full((k, 5), -1.0, jnp.float32),
+            "round": jnp.zeros((), jnp.int32),
+        }
+        fail = jnp.zeros((k,), bool)
+        for mode in ("sequential", "fused"):
+            tr = ElasticTrainer(
+                None, OptimizerConfig(name="sgd"),
+                ElasticConfig(num_workers=k, comm_mode=mode))
+            f = jax.jit(lambda s, t=tr, fl=fail: t.comm_phase(s, fl)[0])
+            us = min(_time(f, state) for _ in range(3))  # CPU noise guard
+            times[(mode, k)] = us
+            rows.append((f"comm_phase_{mode}_k{k}", us, f"n={n}"))
+    k0, k1 = ks[0], ks[-1]
+    for mode in ("sequential", "fused"):
+        growth = times[(mode, k1)] / times[(mode, k0)]
+        rows.append((f"comm_phase_{mode}_growth_k{k0}to{k1}", growth,
+                     f"{k1 // k0}x workers -> {growth:.2f}x time"))
+    rows.append((f"comm_phase_fused_speedup_k{k1}",
+                 times[("sequential", k1)] / times[("fused", k1)],
+                 f"sequential/fused at k={k1}"))
+    return rows
+
+
 def bench():
     rows = []
     from repro.core.elastic import elastic_update

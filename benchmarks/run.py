@@ -8,6 +8,7 @@ def main() -> None:
     from benchmarks import kernels_bench, paper_figs, roofline_bench
 
     sections.append(("kernels", kernels_bench.bench))
+    sections.append(("comm_modes", kernels_bench.bench_comm_modes))
     sections.append(("paper_fig3_overlap", paper_figs.bench_fig3))
     sections.append(("paper_fig45_convergence", paper_figs.bench_fig45))
     sections.append(("roofline", roofline_bench.bench))

@@ -134,6 +134,19 @@ class ElasticConfig:
     failure_prob: float = 1.0 / 3.0   # comm suppressed 1/3 of the time (§VI)
     dynamic: bool = True              # False → fixed-α EASGD behaviour
     oracle: bool = False              # EAHES-OM: oracle failure knowledge
+    # Communication backend. "sequential" preserves the paper's event-ordered
+    # single-device simulation (lax.scan over workers, master updated between
+    # workers). "fused" batches all k syncs: one vmapped scoring pass and one
+    # multi-worker elastic kernel; the master reduction uses the exact
+    # event-order-equivalent weights, workers sync against the round-start
+    # master (delayed averaging à la DaSGD).
+    comm_mode: str = "sequential"     # sequential | fused
+
+    def __post_init__(self):
+        if self.comm_mode not in ("sequential", "fused"):
+            raise ValueError(
+                f"comm_mode must be 'sequential' or 'fused', "
+                f"got {self.comm_mode!r}")
 
 
 @dataclasses.dataclass(frozen=True)

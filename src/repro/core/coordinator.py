@@ -6,12 +6,16 @@ One ``round_step`` =
      (overlap-sharded) data: ``vmap`` over the worker axis, ``scan`` over τ.
      With AdaHessian the Hutchinson HVP rides along (EAHES); with
      SGD/Momentum this is EASGD/EAMSGD.
-  2. **communication phase** — workers sync with the master *sequentially*
-     (event-ordered asynchrony, matching the paper's single-device
-     simulation): for each worker, update the u-history from the estimated
-     master distance, compute the raw score, map through h1/h2 (or fixed α /
-     oracle), and apply the elastic exchange — unless this worker's
-     communication is suppressed by the failure schedule this round.
+  2. **communication phase** — workers sync with the master: update the
+     u-history from the estimated master distance, compute the raw score,
+     map through h1/h2 (or fixed α / oracle), and apply the elastic
+     exchange — unless this worker's communication is suppressed by the
+     failure schedule this round. ``ecfg.comm_mode`` picks the backend:
+     ``"sequential"`` scans workers one by one (event-ordered asynchrony,
+     matching the paper's single-device simulation); ``"fused"`` batches
+     all k syncs into one vmapped scoring pass plus one multi-worker
+     elastic update (Pallas kernel on TPU), with event-order-equivalent
+     master weights so the two masters agree whenever per-worker h2 do.
 
 The same object serves the paper-scale CPU simulation (k∈{4,8}, CNN) and the
 production multi-pod path (worker axis sharded over the 'pod' mesh axis; see
@@ -28,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ElasticConfig, OptimizerConfig
 from repro.core import dynamic_weight as dw
-from repro.core.elastic import elastic_update
+from repro.core.elastic import elastic_update, elastic_update_batched
 from repro.optim.base import apply_updates, make_optimizer
 from repro.optim.hutchinson import hessian_diag
 
@@ -102,10 +106,17 @@ class ElasticTrainer:
 
     # -- communication phase -----------------------------------------------------
     def comm_phase(self, state, fail_mask, failed_recent=None):
-        """fail_mask: (k,) bool — True suppresses this worker's sync."""
+        """fail_mask: (k,) bool — True suppresses this worker's sync.
+
+        Dispatches on ``ecfg.comm_mode``: "sequential" is the paper's
+        event-ordered scan; "fused" batches all k syncs into one scoring
+        pass plus one multi-worker elastic update.
+        """
         ecfg = self.ecfg
         if failed_recent is None:
             failed_recent = jnp.zeros_like(fail_mask)
+        if ecfg.comm_mode == "fused":
+            return self._comm_phase_fused(state, fail_mask, failed_recent)
 
         def sync_one(master, xs):
             w_i, hist_i, fail_i, fr_i = xs
@@ -132,6 +143,39 @@ class ElasticTrainer:
             sync_one, state["master"],
             (state["workers"], state["u_hist"], fail_mask, failed_recent))
         u, a, w1, w2 = diag
+        metrics = {"u": u, "score": a, "h1": w1, "h2": w2}
+        return dict(state, workers=workers, master=master, u_hist=hist,
+                    round=state["round"] + 1), metrics
+
+    def _comm_phase_fused(self, state, fail_mask, failed_recent):
+        """Batched communication: one vmapped scoring pass over all k
+        workers, then a single multi-worker elastic update.
+
+        Workers sync against the round-start master (delayed averaging);
+        the master reduction uses the event-order-equivalent weights
+        g_i = h2_i·Π_{j>i}(1−h2_j), so the resulting master matches the
+        sequential scan exactly whenever the per-worker h2 agree (e.g. the
+        fixed-α and oracle modes). Scores are computed against the same
+        round-start master, which drops the scan's serial dependency.
+        """
+        ecfg = self.ecfg
+        master = state["master"]
+        u, hist, a, w1, w2 = dw.comm_scores_batched(
+            ecfg, state["workers"], master, state["u_hist"],
+            failed_recently=failed_recent)
+        # suppressed communication: no elastic exchange at all
+        w1 = jnp.where(fail_mask, 0.0, w1)
+        w2 = jnp.where(fail_mask, 0.0, w2)
+        g2 = dw.master_schedule_weights(w2)
+        if self.use_pallas:
+            from repro.kernels.elastic.ops import elastic_update_batched_pallas
+
+            workers, master = elastic_update_batched_pallas(
+                state["workers"], master, w1, g2,
+                interpret=jax.default_backend() != "tpu")
+        else:
+            workers, master = elastic_update_batched(
+                state["workers"], master, w1, g2)
         metrics = {"u": u, "score": a, "h1": w1, "h2": w2}
         return dict(state, workers=workers, master=master, u_hist=hist,
                     round=state["round"] + 1), metrics

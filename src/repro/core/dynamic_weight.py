@@ -62,6 +62,51 @@ def raw_score(hist: jax.Array, weights) -> jax.Array:
     return jnp.einsum("...d,d->...", diffs[..., ::-1][..., :n], c)
 
 
+def log_distance_batched(worker_stacked, master_params) -> jax.Array:
+    """u for all k workers in one vmapped pass.
+
+    ``worker_stacked`` is a pytree whose leaves carry a leading worker axis
+    (k, ...); returns (k,) log-distances against the shared master.
+    """
+    return jax.vmap(lambda w: log_distance(w, master_params))(worker_stacked)
+
+
+def comm_scores_batched(cfg: ElasticConfig, worker_stacked, master_params,
+                        u_hist: jax.Array, *, failed_recently=None):
+    """Fused-mode scoring: all k log-distances, history pushes, raw scores
+    and h1/h2 weights computed in one batched pass against the round-start
+    master (no per-worker sequencing).
+
+    Returns ``(u, hist_new, a, w1, w2)`` with leading (k,) axes.
+    """
+    u = log_distance_batched(worker_stacked, master_params)
+    hist_new = push_history(u_hist, u)
+    a = raw_score(hist_new, cfg.score_weights)
+    w1, w2 = weights_for(cfg, a, failed_recently=failed_recently)
+    return u, hist_new, a, w1, w2
+
+
+def master_schedule_weights(w2: jax.Array) -> jax.Array:
+    """Event-order-equivalent master weights for the batched reduction.
+
+    The sequential scan applies θ^m ← θ^m + h2_i (θ^i − θ^m) worker by
+    worker, so worker i's pull is discounted by every later worker:
+
+        θ^m_final = θ^m + Σ_i g_i (θ^i − θ^m),
+        g_i = h2_i · Π_{j>i} (1 − h2_j)
+
+    Feeding g into the single batched reduction reproduces the sequential
+    master bit-for-bit (up to float associativity). A suppressed worker
+    (h2_i = 0) contributes g_i = 0 and leaves the other factors untouched,
+    exactly like the sequential skip.
+    """
+    om = 1.0 - jnp.asarray(w2, jnp.float32)
+    rev = om[::-1]
+    excl = jnp.concatenate(
+        [jnp.ones((1,), rev.dtype), jnp.cumprod(rev[:-1])])[::-1]
+    return w2 * excl
+
+
 def weights_for(cfg: ElasticConfig, a, *, failed_recently=None):
     """(h1, h2) for a raw score; supports fixed-α and oracle modes."""
     if cfg.oracle:

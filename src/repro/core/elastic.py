@@ -13,6 +13,13 @@ import jax
 import jax.numpy as jnp
 
 
+def _unzip_pairs(pairs):
+    """Split a pytree of (worker, master) leaf tuples into two pytrees."""
+    is_pair = lambda x: isinstance(x, tuple)
+    return (jax.tree.map(lambda p: p[0], pairs, is_leaf=is_pair),
+            jax.tree.map(lambda p: p[1], pairs, is_leaf=is_pair))
+
+
 def elastic_update(worker_params, master_params, w1, w2):
     """Apply eqs. (12)–(13). w1/w2 are scalars (possibly traced)."""
 
@@ -23,9 +30,31 @@ def elastic_update(worker_params, master_params, w1, w2):
         return ((wf - w1 * diff).astype(w.dtype),
                 (mf + w2 * diff).astype(m.dtype))
 
-    pairs = jax.tree.map(upd, worker_params, master_params)
-    new_worker = jax.tree.map(lambda p: p[0], pairs,
-                              is_leaf=lambda x: isinstance(x, tuple))
-    new_master = jax.tree.map(lambda p: p[1], pairs,
-                              is_leaf=lambda x: isinstance(x, tuple))
-    return new_worker, new_master
+    return _unzip_pairs(jax.tree.map(upd, worker_params, master_params))
+
+
+def elastic_update_batched(worker_stacked, master_params, w1, w2):
+    """All k worker exchanges plus the master reduction in one batched pass.
+
+    ``worker_stacked`` leaves have a leading worker axis (k, ...); w1/w2 are
+    (k,) vectors. Every worker syncs against the *same* master snapshot and
+
+        θ^i ← θ^i − w1_i · (θ^i − θ^m)
+        θ^m ← θ^m + Σ_i w2_i · (θ^i − θ^m)
+
+    Pass ``dynamic_weight.master_schedule_weights(h2)`` as ``w2`` to make the
+    master reduction exactly match the sequential event-ordered scan.
+    """
+    w1 = jnp.asarray(w1, jnp.float32)
+    w2 = jnp.asarray(w2, jnp.float32)
+
+    def upd(ws, m):
+        h1 = w1.reshape((-1,) + (1,) * (ws.ndim - 1))
+        h2 = w2.reshape((-1,) + (1,) * (ws.ndim - 1))
+        wf = ws.astype(jnp.float32)
+        mf = m.astype(jnp.float32)
+        diff = wf - mf[None]
+        return ((wf - h1 * diff).astype(ws.dtype),
+                (mf + jnp.sum(h2 * diff, axis=0)).astype(m.dtype))
+
+    return _unzip_pairs(jax.tree.map(upd, worker_stacked, master_params))

@@ -19,6 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK_ROWS = 256
 LANES = 128
@@ -58,6 +59,75 @@ def elastic_update_flat(
             spec, spec,
         ],
         out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct(m.shape, m.dtype),
+        ],
+        interpret=interpret,
+    )(h, w, m)
+    return out[0], out[1]
+
+
+# ---------------------------------------------------------------------------
+# multi-worker fused communication phase
+# ---------------------------------------------------------------------------
+
+def _make_batched_kernel(k: int):
+    def kernel(h_ref, w_ref, m_ref, w_out_ref, m_out_ref):
+        # h_ref: (2, k) scalar-prefetched into SMEM; w_ref: (k, bR, LANES)
+        m = m_ref[...].astype(jnp.float32)
+        acc = jnp.zeros_like(m)
+        for i in range(k):  # k is static → unrolled; scalar SMEM reads
+            h1 = h_ref[0, i]
+            h2 = h_ref[1, i]
+            w = w_ref[i].astype(jnp.float32)
+            diff = w - m
+            w_out_ref[i] = (w - h1 * diff).astype(w_out_ref.dtype)
+            acc = acc + h2 * diff
+        m_out_ref[...] = (m + acc).astype(m_out_ref.dtype)
+
+    return kernel
+
+
+def batched_block_rows(k: int, block_rows: int = BLOCK_ROWS) -> int:
+    """Shrink the row tile so all k worker blocks fit in VMEM together."""
+    return max(8, (block_rows // max(1, k)) // 8 * 8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def elastic_update_batched_flat(
+    w: jax.Array,
+    m: jax.Array,
+    h1: jax.Array,
+    h2: jax.Array,
+    *,
+    interpret: bool = True,
+    block_rows: int | None = None,
+) -> tuple:
+    """w: (k, rows, 128) stacked workers; m: (rows, 128); h1/h2: (k,).
+
+    One grid pass over row tiles performs every worker update *and* the
+    h2-weighted master reduction θ^m ← θ^m + Σ_i h2_i (θ^i − θ^m) in a
+    single HBM round-trip: each (w, m) element is read once and each
+    (w', m') element written once, vs 2k reads of m in the sequential scan.
+    """
+    k, rows, lanes = w.shape
+    if block_rows is None:
+        block_rows = batched_block_rows(k)
+    assert lanes == LANES and rows % block_rows == 0, (w.shape, block_rows)
+    assert m.shape == (rows, lanes) and h1.shape == h2.shape == (k,)
+    h = jnp.stack([h1.astype(jnp.float32), h2.astype(jnp.float32)])
+    wspec = pl.BlockSpec((k, block_rows, LANES), lambda i, hv: (0, i, 0))
+    mspec = pl.BlockSpec((block_rows, LANES), lambda i, hv: (i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # h lands in SMEM before the body runs
+        grid=(rows // block_rows,),
+        in_specs=[wspec, mspec],
+        out_specs=[wspec, mspec],
+    )
+    out = pl.pallas_call(
+        _make_batched_kernel(k),
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct(w.shape, w.dtype),
             jax.ShapeDtypeStruct(m.shape, m.dtype),

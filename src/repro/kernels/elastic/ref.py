@@ -1,2 +1,5 @@
-"""Pure-jnp oracle for the elastic-update kernel = repro.core.elastic."""
-from repro.core.elastic import elastic_update as elastic_update_ref  # noqa: F401
+"""Pure-jnp oracles for the elastic-update kernels = repro.core.elastic."""
+from repro.core.elastic import (  # noqa: F401
+    elastic_update as elastic_update_ref,
+    elastic_update_batched as elastic_update_batched_ref,
+)

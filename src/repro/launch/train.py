@@ -47,6 +47,10 @@ def main(argv=None):
     ap.add_argument("--overlap", type=float, default=0.25)
     ap.add_argument("--failure-prob", type=float, default=1 / 3)
     ap.add_argument("--no-dynamic", action="store_true")
+    ap.add_argument("--comm-mode", default="sequential",
+                    choices=("sequential", "fused"),
+                    help="communication backend: event-ordered scan "
+                         "(paper) or fused batched sync")
     ap.add_argument("--elastic", action="store_true", default=True)
     ap.add_argument("--plain", dest="elastic", action="store_false")
     ap.add_argument("--seed", type=int, default=0)
@@ -88,7 +92,7 @@ def main(argv=None):
     ecfg = ElasticConfig(
         num_workers=args.workers, tau=args.tau, alpha=args.alpha,
         overlap_ratio=args.overlap, failure_prob=args.failure_prob,
-        dynamic=not args.no_dynamic)
+        dynamic=not args.no_dynamic, comm_mode=args.comm_mode)
     trainer = ElasticTrainer(model, ocfg, ecfg)
     state = trainer.init_state(jax.random.key(args.seed))
     wb = make_batcher(ecfg)

@@ -7,7 +7,12 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import settings
-
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+# hypothesis is an optional test dep (the `test` extra); collection must not
+# hard-fail without it — property-based modules importorskip it themselves.
+try:
+    from hypothesis import settings
+except ImportError:
+    pass
+else:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")

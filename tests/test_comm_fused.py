@@ -1,0 +1,213 @@
+"""Fused batched communication backend vs the sequential event-ordered scan.
+
+Covers the ISSUE-1 acceptance surface: master equivalence under uniform h2,
+batched-kernel-vs-ref allclose in interpret mode, and fail-mask suppression
+parity between the two comm modes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+from repro.core import dynamic_weight as dw
+from repro.core.coordinator import ElasticTrainer
+from repro.core.elastic import elastic_update, elastic_update_batched
+from repro.kernels.elastic.ops import elastic_update_batched_pallas
+from repro.models.registry import build_model
+
+
+def _trainer(k, comm_mode, use_pallas=False, **kw):
+    model = build_model(get_config("paper_cnn"))
+    defaults = dict(num_workers=k, tau=1, alpha=0.1, dynamic=False,
+                    comm_mode=comm_mode)
+    defaults.update(kw)
+    return ElasticTrainer(model, OptimizerConfig(name="sgd", lr=0.01),
+                          ElasticConfig(**defaults), use_pallas=use_pallas)
+
+
+def _desynced_state(tr, seed=0, scale=0.1):
+    state = tr.init_state(jax.random.key(seed))
+    state["workers"] = jax.tree.map(
+        lambda x: x + jax.random.normal(jax.random.key(seed + 1), x.shape,
+                                        x.dtype) * scale, state["workers"])
+    return state
+
+
+def _stacked_tree(k, shapes, dtype, seed=0):
+    ks = jax.random.split(jax.random.key(seed), len(shapes))
+    return {f"p{i}": jax.random.normal(ks[i], (k,) + s).astype(dtype)
+            for i, s in enumerate(shapes)}
+
+
+def _master_tree(shapes, dtype, seed=99):
+    ks = jax.random.split(jax.random.key(seed), len(shapes))
+    return {f"p{i}": jax.random.normal(ks[i], s).astype(dtype)
+            for i, s in enumerate(shapes)}
+
+
+# ---------------------------------------------------------------------------
+# config / schedule weights
+# ---------------------------------------------------------------------------
+
+def test_comm_mode_validated():
+    with pytest.raises(ValueError):
+        ElasticConfig(comm_mode="nope")
+
+
+def test_master_schedule_weights_match_sequential_unroll():
+    h2 = jnp.asarray([0.3, 0.0, 0.2, 0.1])
+    g = np.asarray(dw.master_schedule_weights(h2))
+    # manual: g_i = h2_i * prod_{j>i} (1 - h2_j)
+    h = np.asarray(h2)
+    for i in range(4):
+        expect = h[i] * np.prod(1.0 - h[i + 1:])
+        np.testing.assert_allclose(g[i], expect, rtol=1e-6)
+    # master coefficient identity: 1 - sum(g) == prod(1 - h2)
+    np.testing.assert_allclose(1.0 - g.sum(), np.prod(1.0 - h), rtol=1e-6)
+
+
+def test_batched_scores_match_per_worker():
+    cfg = ElasticConfig(num_workers=3)
+    ws = _stacked_tree(3, [(8, 4), (5,)], jnp.float32)
+    m = _master_tree([(8, 4), (5,)], jnp.float32)
+    hist = jnp.asarray(np.random.RandomState(0).randn(3, 5), jnp.float32)
+    u, hist_new, a, w1, w2 = dw.comm_scores_batched(cfg, ws, m, hist)
+    for i in range(3):
+        w_i = jax.tree.map(lambda x: x[i], ws)
+        u_i = dw.log_distance(w_i, m)
+        np.testing.assert_allclose(u[i], u_i, rtol=1e-6)
+        h_i = dw.push_history(hist[i], u_i)
+        np.testing.assert_allclose(hist_new[i], h_i, rtol=1e-6)
+        np.testing.assert_allclose(a[i], dw.raw_score(h_i, cfg.score_weights),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# batched kernel vs jnp reference (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("k,shapes", [
+    (2, [(128,)]),
+    (5, [(300, 17), (41,)]),
+    (32, [(1000, 13), (5, 5, 5)]),
+])
+def test_batched_kernel_matches_ref(k, shapes, dtype):
+    ws = _stacked_tree(k, [tuple(s) for s in shapes], dtype)
+    m = _master_tree([tuple(s) for s in shapes], dtype)
+    rng = np.random.RandomState(k)
+    h1 = jnp.asarray(rng.uniform(0, 1, k), jnp.float32)
+    h2 = jnp.asarray(rng.uniform(0, 0.3, k), jnp.float32)
+    wk, mk = elastic_update_batched_pallas(ws, m, h1, h2, interpret=True)
+    wr, mr = elastic_update_batched(ws, m, h1, h2)
+    tol = 1e-6 if dtype == jnp.float32 else 1e-2
+    for key in m:
+        np.testing.assert_allclose(np.asarray(wk[key], np.float32),
+                                   np.asarray(wr[key], np.float32),
+                                   rtol=tol, atol=tol)
+        np.testing.assert_allclose(np.asarray(mk[key], np.float32),
+                                   np.asarray(mr[key], np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.pallas
+def test_batched_kernel_zero_weights_noop():
+    ws = _stacked_tree(4, [(256, 128)], jnp.float32)
+    m = _master_tree([(256, 128)], jnp.float32)
+    z = jnp.zeros(4)
+    wk, mk = elastic_update_batched_pallas(ws, m, z, z, interpret=True)
+    np.testing.assert_array_equal(np.asarray(wk["p0"]), np.asarray(ws["p0"]))
+    np.testing.assert_array_equal(np.asarray(mk["p0"]), np.asarray(m["p0"]))
+
+
+def test_batched_ref_matches_sequential_master_with_schedule_weights():
+    """Batched reduction with g = master_schedule_weights(h2) reproduces the
+    sequential per-worker master updates for arbitrary non-uniform h2."""
+    k = 6
+    ws = _stacked_tree(k, [(64, 3)], jnp.float32)
+    m = _master_tree([(64, 3)], jnp.float32)
+    rng = np.random.RandomState(7)
+    h1 = jnp.asarray(rng.uniform(0, 1, k), jnp.float32)
+    h2 = jnp.asarray(rng.uniform(0, 0.4, k), jnp.float32)
+    _, mb = elastic_update_batched(ws, m, h1, dw.master_schedule_weights(h2))
+    ms = m
+    for i in range(k):
+        w_i = jax.tree.map(lambda x: x[i], ws)
+        _, ms = elastic_update(w_i, ms, float(h1[i]), float(h2[i]))
+    np.testing.assert_allclose(np.asarray(mb["p0"]), np.asarray(ms["p0"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# coordinator: fused vs sequential comm phase
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_fused_master_matches_sequential_uniform_h2(use_pallas):
+    """Fixed-α (uniform h2) and no failures: the fused master must equal the
+    event-ordered sequential master."""
+    k = 4
+    trs = _trainer(k, "sequential")
+    trf = _trainer(k, "fused", use_pallas=use_pallas)
+    state = _desynced_state(trs)
+    fail = jnp.zeros(k, bool)
+    ns, _ = trs.comm_phase(state, fail)
+    nf, _ = trf.comm_phase(state, fail)
+    for a, b in zip(jax.tree.leaves(ns["master"]),
+                    jax.tree.leaves(nf["master"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fused_fail_mask_parity_with_sequential():
+    """A suppressed worker exchanges nothing in either mode and the fused
+    master still matches the sequential one (uniform h2 on the survivors)."""
+    k = 4
+    trs = _trainer(k, "sequential")
+    trf = _trainer(k, "fused")
+    state = _desynced_state(trs)
+    fail = jnp.asarray([False, True, False, True])
+    ns, ms = trs.comm_phase(state, fail)
+    nf, mf = trf.comm_phase(state, fail)
+    for i in (1, 3):
+        before = jax.tree.leaves(jax.tree.map(lambda x: x[i],
+                                              state["workers"]))
+        for new in (ns, nf):
+            after = jax.tree.leaves(jax.tree.map(lambda x: x[i],
+                                                 new["workers"]))
+            for a, b in zip(before, after):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert float(mf["h1"][i]) == 0.0 and float(mf["h2"][i]) == 0.0
+    for a, b in zip(jax.tree.leaves(ns["master"]),
+                    jax.tree.leaves(nf["master"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+    # suppressed workers' u-history still advances in both modes (§V-B)
+    for new in (ns, nf):
+        assert float(new["u_hist"][1, -1]) != float(state["u_hist"][1, -1])
+
+
+def test_fused_dynamic_mode_runs_and_reacts():
+    """Dynamic h1/h2 in fused mode: recovery signature (sharply dropping u)
+    snaps the worker to the master and shields the master."""
+    tr = _trainer(1, "fused", dynamic=True, score_k=-0.05)
+    state = tr.init_state(jax.random.key(0))
+    state["u_hist"] = jnp.asarray([[6.0, 5.0, 4.0, 3.0, 2.0]])
+    state["workers"] = jax.tree.map(lambda x: x + 1e-4, state["workers"])
+    _, m = tr.comm_phase(state, jnp.zeros(1, bool))
+    assert float(m["score"][0]) < -0.05
+    assert float(m["h1"][0]) == pytest.approx(1.0)
+    assert float(m["h2"][0]) == pytest.approx(0.0)
+
+
+def test_fused_round_counter_and_hist_shapes():
+    tr = _trainer(3, "fused")
+    state = tr.init_state(jax.random.key(0))
+    new, m = tr.comm_phase(state, jnp.zeros(3, bool))
+    assert int(new["round"]) == 1
+    assert new["u_hist"].shape == (3, 5)
+    assert m["score"].shape == (3,)

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _property_shim import given, strategies as st
 
 from repro.configs.base import ElasticConfig
 from repro.core import dynamic_weight as dw

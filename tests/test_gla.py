@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _property_shim import given, settings, strategies as st
 
 from repro.nn.gla import causal_conv1d, gla_chunked, gla_decode_step, gla_ref
 
@@ -31,6 +31,7 @@ def test_chunked_matches_ref(inclusive, chunk, T):
     np.testing.assert_allclose(Sc, Sr, rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 @given(seed=st.integers(0, 50), decay=st.floats(0.01, 1.5))
 @settings(max_examples=15)
 def test_chunked_matches_ref_property(seed, decay):

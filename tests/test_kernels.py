@@ -7,6 +7,8 @@ import pytest
 
 from repro.configs.base import OptimizerConfig
 
+pytestmark = pytest.mark.pallas  # interpret-mode kernel checks
+
 
 # ---------------------------------------------------------------------------
 # flash attention

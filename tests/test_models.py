@@ -37,10 +37,8 @@ def test_forward_shapes_and_finite(arch_setup):
     assert bool(jnp.isfinite(jnp.asarray(aux))), arch
 
 
-def test_one_train_step_decreases_nothing_nan(arch_setup):
-    arch, cfg, model, params, batch = arch_setup
+def _assert_train_step_finite_and_moves(arch, model, batch):
     ocfg = OptimizerConfig(name="adahessian", lr=1e-3)
-    state = {"params": params}
     state = init_train_state(model, ocfg, jax.random.key(0))
     step = jax.jit(make_train_step(model, ocfg))
     new_state, m = step(state, batch, jax.random.key(2))
@@ -51,6 +49,21 @@ def test_one_train_step_decreases_nothing_nan(arch_setup):
         for a, b in zip(jax.tree.leaves(state["params"]),
                         jax.tree.leaves(new_state["params"])))
     assert moved, arch
+
+
+@pytest.mark.slow
+def test_one_train_step_decreases_nothing_nan(arch_setup):
+    arch, cfg, model, params, batch = arch_setup
+    _assert_train_step_finite_and_moves(arch, model, batch)
+
+
+def test_one_train_step_canary_dense():
+    """Fast unmarked canary: one transformer train step stays finite, so the
+    CI fast set (-m "not slow") keeps a NaN signal beyond paper-cnn."""
+    cfg = get_config("stablelm_3b", smoke=True)
+    model = build_model(cfg)
+    batch = model.dummy_batch(jax.random.key(1), SMOKE_TRAIN)
+    _assert_train_step_finite_and_moves("stablelm_3b", model, batch)
 
 
 def test_decode_step_finite(arch_setup):

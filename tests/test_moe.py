@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _property_shim import given, settings, strategies as st
 
 from repro.configs.base import ModelConfig
 from repro.nn.moe import _capacity, apply_moe, moe_ref_dense, moe_specs
@@ -52,6 +52,7 @@ def test_aux_loss_uniform_router_is_one():
     assert float(aux) >= 1.0 - 1e-5
 
 
+@pytest.mark.slow
 @given(S=st.integers(4, 64), cf=st.floats(0.25, 4.0))
 @settings(max_examples=20)
 def test_capacity_formula(S, cf):

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _property_shim import given, strategies as st
 
 from repro.configs.base import OptimizerConfig
 from repro.optim.adahessian import spatial_average

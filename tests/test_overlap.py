@@ -1,7 +1,7 @@
 """Property tests for the data-overlap partition (paper §V-A)."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _property_shim import given, strategies as st
 
 from repro.core.overlap import overlap_partition, worker_datasets
 

@@ -9,6 +9,8 @@ from repro.core.coordinator import ElasticTrainer
 from repro.models.registry import build_model
 from repro.nn.param import init_tree
 
+pytestmark = pytest.mark.pallas  # interpret-mode kernel paths
+
 
 def test_model_pallas_attention_matches_jnp():
     cfg = get_config("h2o_danube_1_8b", smoke=True).replace(
