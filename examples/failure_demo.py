@@ -1,43 +1,93 @@
-"""Failure anatomy demo: force one worker to fail for a stretch of rounds
-and print the full paper mechanism — u (log distance), raw score a, and the
-h1/h2 weights — before, during, and after the outage.
+"""Failure anatomy demo: inject a failure regime and print the full paper
+mechanism — u (log distance), raw score a, and the h1/h2 weights — before,
+during, and after each fault.
+
+The default ``outage`` scenario is the hand-crafted original: worker 0 loses
+master contact for rounds 4–8. ``--scenario`` swaps in any regime from the
+scenario engine (``repro.core.scenarios``) by name:
 
     PYTHONPATH=src python examples/failure_demo.py
+    PYTHONPATH=src python examples/failure_demo.py --scenario burst
+    PYTHONPATH=src python examples/failure_demo.py --scenario crash_restart
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+from repro.configs.base import (FAILURE_SCENARIOS, ElasticConfig,
+                                OptimizerConfig, get_config)
 from repro.core.coordinator import ElasticTrainer
+from repro.core.scenarios import ScenarioSchedule, make_scenario
 from repro.data.pipeline import WorkerBatcher
 from repro.data.synthetic import SyntheticImages
 from repro.models.registry import build_model
 
-ROUNDS = 14
-OUTAGE = range(4, 9)  # worker 0 loses master contact in these rounds
 
-model = build_model(get_config("paper-cnn"))
-ecfg = ElasticConfig(num_workers=2, tau=1, alpha=0.1, overlap_ratio=0.25,
-                     dynamic=True)
-trainer = ElasticTrainer(model, OptimizerConfig(name="adahessian", lr=0.01),
-                         ecfg)
-state = trainer.init_state(jax.random.key(0))
-ds = SyntheticImages(n=2000, n_test=300)
-batcher = WorkerBatcher(ds.images, ds.labels, ecfg, batch_size=32)
+def outage_schedule(rounds, k):
+    """The original deterministic demo: worker 0 down for rounds 4–8."""
+    fail = np.zeros((rounds, k), bool)
+    fail[4:9, 0] = True
+    z = np.zeros((rounds, k), bool)
+    return ScenarioSchedule(fail, z, z)
 
-print(" rnd | fail |      u0      a0     h1_0   h2_0 |  master_acc")
-test = {k: jnp.asarray(v) for k, v in ds.test_batch().items()}
-for rnd in range(ROUNDS):
-    batches = {k: jnp.asarray(v) for k, v in batcher.round_batches().items()}
-    fail = jnp.asarray([rnd in OUTAGE, False])
-    state, m = trainer.round_step(state, batches, jax.random.key(rnd), fail,
-                                  jnp.zeros(2, bool))
-    acc = float(trainer.master_accuracy(state, test))
-    print(f"  {rnd:2d} |  {int(fail[0])}   | {float(m['u'][0]):8.3f} "
-          f"{float(m['score'][0]):8.4f} {float(m['h1'][0]):6.3f} "
-          f"{float(m['h2'][0]):6.3f} |    {acc:.3f}")
 
-print("\nDuring the outage u0 climbs (worker drifts); at recovery the "
-      "distance collapses, the score goes negative, and h1→1 / h2→0 snap "
-      "the worker back while protecting the master (paper §V-B).")
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="outage",
+                    choices=("outage",) + FAILURE_SCENARIOS)
+    ap.add_argument("--rounds", type=int, default=14)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    model = build_model(get_config("paper-cnn"))
+    ecfg = ElasticConfig(num_workers=args.workers, tau=1, alpha=0.1,
+                         overlap_ratio=0.25, dynamic=True,
+                         failure_scenario=(args.scenario
+                                           if args.scenario != "outage"
+                                           else "iid"))
+    trainer = ElasticTrainer(model,
+                             OptimizerConfig(name="adahessian", lr=0.01),
+                             ecfg)
+    state = trainer.init_state(jax.random.key(args.seed))
+    ds = SyntheticImages(n=2000, n_test=300)
+    batcher = WorkerBatcher(ds.images, ds.labels, ecfg, batch_size=32)
+
+    if args.scenario == "outage":
+        sched = outage_schedule(args.rounds, args.workers)
+    else:
+        sched = make_scenario(ecfg).schedule(args.seed + 7, args.rounds,
+                                             args.workers)
+
+    print(f"scenario={args.scenario}  (F=comm fail, S=straggle, R=restart; "
+          f"worker-0 column shown)")
+    print(" rnd | F S R |      u0      a0     h1_0   h2_0 |  master_acc")
+    test = {k: jnp.asarray(v) for k, v in ds.test_batch().items()}
+    for rnd in range(args.rounds):
+        batches = {k: jnp.asarray(v)
+                   for k, v in batcher.round_batches().items()}
+        fail = jnp.asarray(sched.fail[rnd])
+        recent = jnp.asarray(sched.failed_recent(rnd, ecfg.score_window))
+        straggle = (jnp.asarray(sched.straggle[rnd])
+                    if sched.has_stragglers else None)
+        restart = (jnp.asarray(sched.restart[rnd])
+                   if sched.has_restarts else None)
+        state, m = trainer.round_step(state, batches, jax.random.key(rnd),
+                                      fail, recent, straggle, restart)
+        acc = float(trainer.master_accuracy(state, test))
+        print(f"  {rnd:2d} | {int(sched.fail[rnd, 0])} "
+              f"{int(sched.straggle[rnd, 0])} {int(sched.restart[rnd, 0])} "
+              f"| {float(m['u'][0]):8.3f} {float(m['score'][0]):8.4f} "
+              f"{float(m['h1'][0]):6.3f} {float(m['h2'][0]):6.3f} |"
+              f"    {acc:.3f}")
+
+    print("\nWhile a worker is cut off (or straggling) its u drifts; when it "
+          "reconnects — or rejoins reset to the master after a crash — the "
+          "distance collapses, the score goes negative, and h1→1 / h2→0 "
+          "snap the worker back while protecting the master (paper §V-B).")
+
+
+if __name__ == "__main__":
+    main()

@@ -120,6 +120,12 @@ INPUT_SHAPES = {
 }
 
 
+# Failure scenario catalogue (generators live in repro/core/scenarios.py;
+# kept here so ElasticConfig can validate without a circular import).
+FAILURE_SCENARIOS = ("iid", "burst", "correlated", "straggler",
+                     "crash_restart")
+
+
 @dataclasses.dataclass(frozen=True)
 class ElasticConfig:
     """Paper Section V hyper-parameters."""
@@ -141,12 +147,24 @@ class ElasticConfig:
     # event-order-equivalent weights, workers sync against the round-start
     # master (delayed averaging à la DaSGD).
     comm_mode: str = "sequential"     # sequential | fused
+    # Failure scenario engine (repro/core/scenarios.py). "iid" is the paper's
+    # Bernoulli model; the other regimes reuse failure_prob as their
+    # stationary fault rate plus the knobs below.
+    failure_scenario: str = "iid"
+    burst_recover_prob: float = 0.25  # burst/straggler: P(bad→good)/round
+    fault_groups: int = 2             # correlated: number of co-failing racks
+    crash_downtime: int = 3           # crash_restart: rounds down per crash
+    straggler_tau_scale: float = 0.5  # straggler: fraction of τ it completes
 
     def __post_init__(self):
         if self.comm_mode not in ("sequential", "fused"):
             raise ValueError(
                 f"comm_mode must be 'sequential' or 'fused', "
                 f"got {self.comm_mode!r}")
+        if self.failure_scenario not in FAILURE_SCENARIOS:
+            raise ValueError(
+                f"failure_scenario must be one of {FAILURE_SCENARIOS}, "
+                f"got {self.failure_scenario!r}")
 
 
 @dataclasses.dataclass(frozen=True)

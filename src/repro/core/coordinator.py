@@ -66,10 +66,37 @@ class ElasticTrainer:
             "workers": worker_params,
             "opt": worker_opt,
             "master": master,
+            # previous-round master snapshot: the stale estimate straggling
+            # workers score against (scenario engine, repro/core/scenarios.py)
+            "master_prev": master,
             "u_hist": jnp.full((k, self.ecfg.score_window), -30.0,
                                jnp.float32),
             "round": jnp.zeros((), jnp.int32),
         }
+
+    # -- failure-scenario state transitions --------------------------------------
+    def apply_restarts(self, state, restart):
+        """Crash-restart rejoin (scenario ``crash_restart``): workers with
+        ``restart[i]`` True have their params reset to the master. The
+        u-history is deliberately kept — the recorded pre-crash drift makes
+        the next score see the distance collapse, driving the recovery path
+        h1→1 / h2→0 (§V-B).
+
+        Optimizer accumulators are restored rather than re-initialized
+        (restore-from-checkpoint semantics): a cold AdaHessian state takes
+        violently large first steps from the master position, and the h2 map
+        gives runaway workers the full α for any positive score, so a fresh
+        init lets a single rejoin corrupt the master.
+        """
+
+        def sel(new, old):
+            r = restart.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(r, new, old)
+
+        workers = jax.tree.map(
+            lambda w, m: sel(jnp.broadcast_to(m.astype(w.dtype), w.shape), w),
+            state["workers"], state["master"])
+        return dict(state, workers=workers)
 
     # -- local phase ------------------------------------------------------------
     def _one_step(self, params, opt_state, batch, rng):
@@ -86,27 +113,52 @@ class ElasticTrainer:
         params = apply_updates(params, updates)
         return params, opt_state, loss
 
-    def local_phase(self, state, batches, rng):
-        """batches: pytree with leading (τ, k, ...) axes."""
+    def local_phase(self, state, batches, rng, straggle=None):
+        """batches: pytree with leading (τ, k, ...) axes.
+
+        ``straggle``: optional (k,) bool — straggling workers are slow, not
+        dead: they complete only the first
+        ``max(1, round(straggler_tau_scale·τ))`` local steps; params and
+        optimizer state freeze for the rest of the phase.
+        """
         k = self.ecfg.num_workers
         tau = jax.tree.leaves(batches)[0].shape[0]
+        tau_eff = max(1, round(self.ecfg.straggler_tau_scale * tau))
 
         def tau_step(carry, inp):
             params, opt_state = carry
-            batch_t, rng_t = inp
+            batch_t, rng_t, t = inp
             rngs = jax.random.split(rng_t, k)
-            params, opt_state, loss = jax.vmap(self._one_step)(
+            new_p, new_o, loss = jax.vmap(self._one_step)(
                 params, opt_state, batch_t, rngs)
-            return (params, opt_state), loss
+            if straggle is not None:
+                # frozen steps contribute neither updates nor loss metrics
+                active = jnp.logical_or(~straggle, t < tau_eff)
+                sel = lambda n, o: jnp.where(
+                    active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+                new_p = jax.tree.map(sel, new_p, params)
+                new_o = jax.tree.map(sel, new_o, opt_state)
+                loss = jnp.where(active, loss, 0.0)
+                n_active = jnp.sum(active)
+            else:
+                n_active = jnp.asarray(k)
+            return (new_p, new_o), (jnp.sum(loss), n_active)
 
         rngs = jax.random.split(rng, tau)
-        (workers, opt_state), losses = jax.lax.scan(
-            tau_step, (state["workers"], state["opt"]), (batches, rngs))
-        return dict(state, workers=workers, opt=opt_state), jnp.mean(losses)
+        (workers, opt_state), (losses, counts) = jax.lax.scan(
+            tau_step, (state["workers"], state["opt"]),
+            (batches, rngs, jnp.arange(tau)))
+        mean_loss = jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1)
+        return dict(state, workers=workers, opt=opt_state), mean_loss
 
     # -- communication phase -----------------------------------------------------
-    def comm_phase(self, state, fail_mask, failed_recent=None):
+    def comm_phase(self, state, fail_mask, failed_recent=None, straggle=None):
         """fail_mask: (k,) bool — True suppresses this worker's sync.
+
+        ``straggle``: optional (k,) bool — straggling workers score against
+        the *previous* round's master snapshot (their estimate of the master
+        is stale; the elastic exchange itself still uses the live master,
+        which the parameter server holds).
 
         Dispatches on ``ecfg.comm_mode``: "sequential" is the paper's
         event-ordered scan; "fused" batches all k syncs into one scoring
@@ -116,13 +168,20 @@ class ElasticTrainer:
         if failed_recent is None:
             failed_recent = jnp.zeros_like(fail_mask)
         if ecfg.comm_mode == "fused":
-            return self._comm_phase_fused(state, fail_mask, failed_recent)
+            return self._comm_phase_fused(state, fail_mask, failed_recent,
+                                          straggle)
+        stale_master = state.get("master_prev", state["master"])
+        straggle_in = (jnp.zeros_like(fail_mask) if straggle is None
+                       else straggle)
 
         def sync_one(master, xs):
-            w_i, hist_i, fail_i, fr_i = xs
+            w_i, hist_i, fail_i, fr_i, st_i = xs
             # u from the estimated master (other-worker estimate ≈ current
             # master in the event-ordered simulation)
             u_t = dw.log_distance(w_i, master)
+            if straggle is not None:
+                u_t = jnp.where(st_i, dw.log_distance(w_i, stale_master),
+                                u_t)
             hist_new = dw.push_history(hist_i, u_t)
             a = dw.raw_score(hist_new, ecfg.score_weights)
             w1, w2 = dw.weights_for(ecfg, a, failed_recently=fr_i)
@@ -141,13 +200,16 @@ class ElasticTrainer:
 
         master, (workers, hist, diag) = jax.lax.scan(
             sync_one, state["master"],
-            (state["workers"], state["u_hist"], fail_mask, failed_recent))
+            (state["workers"], state["u_hist"], fail_mask, failed_recent,
+             straggle_in))
         u, a, w1, w2 = diag
         metrics = {"u": u, "score": a, "h1": w1, "h2": w2}
-        return dict(state, workers=workers, master=master, u_hist=hist,
+        return dict(state, workers=workers, master=master,
+                    master_prev=state["master"], u_hist=hist,
                     round=state["round"] + 1), metrics
 
-    def _comm_phase_fused(self, state, fail_mask, failed_recent):
+    def _comm_phase_fused(self, state, fail_mask, failed_recent,
+                          straggle=None):
         """Batched communication: one vmapped scoring pass over all k
         workers, then a single multi-worker elastic update.
 
@@ -162,7 +224,10 @@ class ElasticTrainer:
         master = state["master"]
         u, hist, a, w1, w2 = dw.comm_scores_batched(
             ecfg, state["workers"], master, state["u_hist"],
-            failed_recently=failed_recent)
+            failed_recently=failed_recent,
+            stale_master=(None if straggle is None
+                          else state.get("master_prev", master)),
+            straggle=straggle)
         # suppressed communication: no elastic exchange at all
         w1 = jnp.where(fail_mask, 0.0, w1)
         w2 = jnp.where(fail_mask, 0.0, w2)
@@ -177,14 +242,22 @@ class ElasticTrainer:
             workers, master = elastic_update_batched(
                 state["workers"], master, w1, g2)
         metrics = {"u": u, "score": a, "h1": w1, "h2": w2}
-        return dict(state, workers=workers, master=master, u_hist=hist,
+        return dict(state, workers=workers, master=master,
+                    master_prev=state["master"], u_hist=hist,
                     round=state["round"] + 1), metrics
 
     # -- full round ---------------------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)
-    def round_step(self, state, batches, rng, fail_mask, failed_recent):
-        state, loss = self.local_phase(state, batches, rng)
-        state, metrics = self.comm_phase(state, fail_mask, failed_recent)
+    def round_step(self, state, batches, rng, fail_mask, failed_recent,
+                   straggle=None, restart=None):
+        """One simulated round under a failure scenario: optional crash
+        rejoins, the local phase (with per-worker straggler slowdown), then
+        the communication phase under the fail mask."""
+        if restart is not None:
+            state = self.apply_restarts(state, restart)
+        state, loss = self.local_phase(state, batches, rng, straggle)
+        state, metrics = self.comm_phase(state, fail_mask, failed_recent,
+                                         straggle)
         metrics["loss"] = loss
         return state, metrics
 

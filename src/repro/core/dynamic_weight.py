@@ -72,14 +72,22 @@ def log_distance_batched(worker_stacked, master_params) -> jax.Array:
 
 
 def comm_scores_batched(cfg: ElasticConfig, worker_stacked, master_params,
-                        u_hist: jax.Array, *, failed_recently=None):
+                        u_hist: jax.Array, *, failed_recently=None,
+                        stale_master=None, straggle=None):
     """Fused-mode scoring: all k log-distances, history pushes, raw scores
     and h1/h2 weights computed in one batched pass against the round-start
     master (no per-worker sequencing).
 
+    ``straggle`` (k,) bool + ``stale_master``: straggling workers measure
+    their distance against the stale master snapshot instead (their estimate
+    of the master lags — scenario engine, repro/core/scenarios.py).
+
     Returns ``(u, hist_new, a, w1, w2)`` with leading (k,) axes.
     """
     u = log_distance_batched(worker_stacked, master_params)
+    if straggle is not None and stale_master is not None:
+        u_stale = log_distance_batched(worker_stacked, stale_master)
+        u = jnp.where(straggle, u_stale, u)
     hist_new = push_history(u_hist, u)
     a = raw_score(hist_new, cfg.score_weights)
     w1, w2 = weights_for(cfg, a, failed_recently=failed_recently)

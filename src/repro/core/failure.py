@@ -2,7 +2,13 @@
 is suppressed with probability ``failure_prob`` (1/3 in the paper) at each
 communication round. The failure is *algorithmically invisible* — no detector
 exists; only DEAHES-O's score sees its footprint. The oracle baseline
-(EAHES-OM) is allowed to read this schedule directly."""
+(EAHES-OM) is allowed to read this schedule directly.
+
+This module keeps the paper's i.i.d. Bernoulli generator only. Richer
+regimes — bursty (Markov) failures, rack-correlated faults, stragglers, and
+crash/restart cycles — live in the pluggable scenario engine,
+``repro.core.scenarios`` (the ``iid`` scenario there wraps these functions).
+"""
 from __future__ import annotations
 
 import jax
@@ -18,7 +24,11 @@ def failure_schedule(rng: jax.Array, rounds: int, k: int, prob: float
 
 def failure_schedule_np(seed: int, rounds: int, k: int, prob: float
                         ) -> np.ndarray:
-    return np.random.default_rng(seed).random((rounds, k)) < prob
+    """Host-side mirror of :func:`failure_schedule`: materializes the *same*
+    bits for the same integer seed (it is the jax generator, evaluated), so
+    the two variants are seed-parity by construction."""
+    return np.asarray(
+        failure_schedule(jax.random.key(seed), rounds, k, prob))
 
 
 def failed_recently(schedule: jax.Array, t: int | jax.Array, window: int

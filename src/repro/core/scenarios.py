@@ -1,0 +1,317 @@
+"""Failure scenario engine: pluggable fault / straggler models (ISSUE-2).
+
+The paper models exactly one failure mode — i.i.d. Bernoulli suppression of
+the worker↔master communication (``repro.core.failure``). Real clusters fail
+in richer ways: NICs flap (failures correlated in time), racks lose power
+(failures correlated across workers), nodes run slow without dying
+(stragglers — DaSGD, Zhou et al. 2020), and crashed workers rejoin from the
+master checkpoint. Each regime stresses a different part of DEAHES-O's
+dynamic weighting, so each gets its own generator here.
+
+A :class:`FailureScenario` emits a :class:`ScenarioSchedule` — three
+``(rounds, k)`` bool masks precomputed host-side with numpy (deterministic
+given the seed). Per-round rows are handed to the jitted
+``ElasticTrainer.round_step`` as plain arrays, so every scenario is
+jit-compatible by construction:
+
+``fail``
+    communication with the master suppressed this round (the worker keeps
+    training locally — network partition semantics, as in the paper).
+``straggle``
+    the worker is slow, not dead: it completes only a reduced effective τ in
+    the local phase and scores itself against a stale master estimate
+    (``ElasticConfig.straggler_tau_scale``).
+``restart``
+    the worker rejoins this round: its params are reset to the master
+    before the local phase. Optimizer accumulators are restored, not
+    re-initialized, and the u-history is deliberately *kept* — see
+    ``ElasticTrainer.apply_restarts`` for both rationales (the score's
+    recovery path, and the AdaHessian cold-start blow-up a fresh init
+    causes).
+
+Scenario catalogue (names in ``repro.configs.base.FAILURE_SCENARIOS``):
+
+=============== ============================================================
+``iid``         paper baseline: Bernoulli(``failure_prob``) per (round, worker)
+``burst``       two-state Markov chain per worker (flapping NIC): failures
+                arrive in bursts; stationary failure rate = ``failure_prob``
+``correlated``  rack-level faults: workers are split into ``fault_groups``
+                groups and a whole group fails together
+``straggler``   no drops; Markov-persistent slow periods per worker at
+                stationary rate ``failure_prob``
+``crash_restart`` renewal process: a crash takes the worker down for
+                ``crash_downtime`` rounds, then it rejoins reset to the
+                master; stationary down-fraction = ``failure_prob``
+=============== ============================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import FAILURE_SCENARIOS, ElasticConfig
+from repro.core.failure import failure_schedule_np
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSchedule:
+    """Precomputed (rounds, k) bool masks; index a row per round and wrap it
+    in ``jnp.asarray`` to feed the jitted ``round_step``."""
+
+    fail: np.ndarray
+    straggle: np.ndarray
+    restart: np.ndarray
+
+    def __post_init__(self):
+        assert self.fail.shape == self.straggle.shape == self.restart.shape
+        assert self.fail.dtype == bool
+
+    @property
+    def rounds(self) -> int:
+        return self.fail.shape[0]
+
+    @property
+    def num_workers(self) -> int:
+        return self.fail.shape[1]
+
+    @property
+    def has_stragglers(self) -> bool:
+        return bool(self.straggle.any())
+
+    @property
+    def has_restarts(self) -> bool:
+        return bool(self.restart.any())
+
+    def failed_recent(self, r: int, window: int) -> np.ndarray:
+        """(k,) bool — failed in any of the last ``window`` rounds ≤ r
+        (rounds r−window+1..r, matching ``repro.core.failure.failed_recently``).
+
+        Feed for the oracle baseline (EAHES-OM), which is allowed to read
+        the schedule directly.
+        """
+        return self.fail[max(0, r - window + 1):r + 1].any(axis=0)
+
+
+def _zeros(rounds: int, k: int) -> np.ndarray:
+    return np.zeros((rounds, k), bool)
+
+
+def _check_rate(rate: float, name: str, lt_one: bool = False):
+    hi_ok = rate < 1.0 if lt_one else rate <= 1.0
+    if not (0.0 <= rate and hi_ok):
+        bound = "[0, 1)" if lt_one else "[0, 1]"
+        raise ValueError(f"{name}: rate must be in {bound}, got {rate}")
+
+
+def _chain_enter_prob(rate: float, recover_prob: float, name: str) -> float:
+    """Entry probability giving a two-state chain the stationary bad-rate
+    ``rate``; validates that such a chain exists."""
+    _check_rate(rate, name, lt_one=True)
+    if not 0.0 < recover_prob <= 1.0:
+        raise ValueError(f"{name}: recover_prob must be in (0, 1], "
+                         f"got {recover_prob}")
+    enter = recover_prob * rate / (1.0 - rate)
+    if enter > 1.0:
+        raise ValueError(
+            f"{name}: no two-state chain has stationary rate {rate} with "
+            f"recover_prob {recover_prob} (derived entry prob "
+            f"{enter:.3f} > 1); lower one of them")
+    return enter
+
+
+def _markov_chain(rng: np.random.Generator, rounds: int, k: int,
+                  p_enter: float, p_exit: float) -> np.ndarray:
+    """(rounds, k) bool two-state chain per worker, True = 'bad' state.
+
+    The chain starts from its stationary distribution
+    π = p_enter / (p_enter + p_exit), so the marginal bad-rate is π at
+    *every* round, not only asymptotically.
+    """
+    pi = p_enter / max(p_enter + p_exit, 1e-12)
+    state = rng.random(k) < pi
+    out = np.empty((rounds, k), bool)
+    for t in range(rounds):
+        out[t] = state
+        u = rng.random(k)
+        state = np.where(state, u < 1.0 - p_exit, u < p_enter)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureScenario:
+    """Base class: emits (rounds, k) schedules, deterministic given seed."""
+
+    name = "base"
+
+    def schedule(self, seed: int, rounds: int, k: int) -> ScenarioSchedule:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class IIDScenario(FailureScenario):
+    """Paper §VI baseline: i.i.d. Bernoulli(rate) comm suppression."""
+
+    rate: float = 1.0 / 3.0
+    name = "iid"
+
+    def __post_init__(self):
+        _check_rate(self.rate, self.name)
+
+    def schedule(self, seed, rounds, k):
+        fail = failure_schedule_np(seed, rounds, k, self.rate)
+        return ScenarioSchedule(fail, _zeros(rounds, k), _zeros(rounds, k))
+
+
+@dataclasses.dataclass(frozen=True)
+class _MarkovScenario(FailureScenario):
+    """Shared two-state-chain machinery for ``burst`` and ``straggler``:
+    ``recover_prob`` is P(bad→good) per round (mean bad period
+    1/recover_prob rounds); the entry probability is derived so the
+    stationary bad-rate equals ``rate``. Subclasses pick which schedule
+    mask the chain fills."""
+
+    rate: float = 1.0 / 3.0
+    recover_prob: float = 0.25
+
+    def __post_init__(self):
+        self.enter_prob  # validates at construction
+
+    @property
+    def enter_prob(self) -> float:
+        # stationarity: rate = enter / (enter + recover)
+        return _chain_enter_prob(self.rate, self.recover_prob, self.name)
+
+    def _chain(self, seed: int, rounds: int, k: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        return _markov_chain(rng, rounds, k, self.enter_prob,
+                             self.recover_prob)
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstScenario(_MarkovScenario):
+    """Time-correlated failures (flapping NIC): failures arrive in
+    multi-round bursts."""
+
+    name = "burst"
+
+    def schedule(self, seed, rounds, k):
+        return ScenarioSchedule(self._chain(seed, rounds, k),
+                                _zeros(rounds, k), _zeros(rounds, k))
+
+
+@dataclasses.dataclass(frozen=True)
+class CorrelatedScenario(FailureScenario):
+    """Rack-level faults: workers are split into ``groups`` contiguous
+    groups; each group draws one Bernoulli(rate) per round and all its
+    workers fail together."""
+
+    rate: float = 1.0 / 3.0
+    groups: int = 2
+    name = "correlated"
+
+    def __post_init__(self):
+        _check_rate(self.rate, self.name)
+        if self.groups < 1:
+            raise ValueError(f"{self.name}: need ≥ 1 group, "
+                             f"got {self.groups}")
+
+    def group_of(self, k: int) -> np.ndarray:
+        g = min(self.groups, k)
+        return (np.arange(k) * g) // k
+
+    def schedule(self, seed, rounds, k):
+        rng = np.random.default_rng(seed)
+        g = min(self.groups, k)
+        group_fail = rng.random((rounds, g)) < self.rate
+        fail = group_fail[:, self.group_of(k)]
+        return ScenarioSchedule(fail, _zeros(rounds, k), _zeros(rounds, k))
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerScenario(_MarkovScenario):
+    """Slow-not-dead workers (DaSGD regime): Markov-persistent slow periods
+    at stationary rate ``rate``. No communication is dropped; a straggling
+    worker runs a reduced effective τ and scores against a stale master."""
+
+    name = "straggler"
+
+    def schedule(self, seed, rounds, k):
+        return ScenarioSchedule(_zeros(rounds, k),
+                                self._chain(seed, rounds, k),
+                                _zeros(rounds, k))
+
+
+@dataclasses.dataclass(frozen=True)
+class CrashRestartScenario(FailureScenario):
+    """Crash + rejoin renewal process: an up worker crashes with a derived
+    per-round probability, stays down (comm suppressed) for ``downtime``
+    rounds, then rejoins with its state reset to the master (restart mask).
+    The crash probability is chosen so the stationary fraction of down
+    rounds equals ``rate``."""
+
+    rate: float = 1.0 / 3.0
+    downtime: int = 3
+    name = "crash_restart"
+
+    def __post_init__(self):
+        if self.downtime < 1:
+            raise ValueError(f"{self.name}: downtime must be ≥ 1 round, "
+                             f"got {self.downtime}")
+        _check_rate(self.rate, self.name, lt_one=True)
+        if self.crash_prob > 1.0:
+            d = self.downtime
+            raise ValueError(
+                f"{self.name}: rate {self.rate} unreachable with downtime "
+                f"{d} — every cycle has ≥ 1 up round, capping the "
+                f"down-fraction at {d / (d + 1):.3f}")
+
+    @property
+    def crash_prob(self) -> float:
+        # renewal cycle: up-time of 1 + Geometric(c) rounds (the rejoin
+        # round is crash-free, mean up-time 1/c) + `downtime` down rounds;
+        # solve downtime / (downtime + 1/c) = rate for c.
+        return self.rate / (self.downtime * (1.0 - self.rate))
+
+    def schedule(self, seed, rounds, k):
+        rng = np.random.default_rng(seed)
+        d, c = self.downtime, self.crash_prob
+        # near-stationary init: down with prob `rate`, residual downtime
+        # uniform over 1..d
+        remaining = np.where(rng.random(k) < self.rate,
+                             rng.integers(1, d + 1, size=k), 0)
+        down = np.empty((rounds, k), bool)
+        just_up = np.zeros(k, bool)
+        for t in range(rounds):
+            # a worker never re-crashes on its rejoin round, so every outage
+            # is followed by at least one up round where `restart` fires
+            crash = (remaining == 0) & ~just_up & (rng.random(k) < c)
+            remaining = np.where(crash, d, remaining)
+            down[t] = remaining > 0
+            just_up = remaining == 1
+            remaining = np.maximum(remaining - 1, 0)
+        restart = _zeros(rounds, k)
+        restart[1:] = down[:-1] & ~down[1:]
+        return ScenarioSchedule(down, _zeros(rounds, k), restart)
+
+
+def make_scenario(ecfg: ElasticConfig) -> FailureScenario:
+    """Build the scenario named by ``ecfg.failure_scenario`` from the
+    ElasticConfig knobs (rate = ``failure_prob`` for every scenario)."""
+    name, p = ecfg.failure_scenario, ecfg.failure_prob
+    if name == "iid":
+        return IIDScenario(p)
+    if name == "burst":
+        return BurstScenario(p, ecfg.burst_recover_prob)
+    if name == "correlated":
+        return CorrelatedScenario(p, ecfg.fault_groups)
+    if name == "straggler":
+        return StragglerScenario(p, ecfg.burst_recover_prob)
+    if name == "crash_restart":
+        return CrashRestartScenario(p, ecfg.crash_downtime)
+    raise ValueError(f"unknown failure scenario {name!r}; "
+                     f"known: {FAILURE_SCENARIOS}")
+
+
+def scenario_names() -> tuple:
+    return FAILURE_SCENARIOS

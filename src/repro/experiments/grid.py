@@ -2,7 +2,9 @@
 run as a bounded pool of subprocesses (XLA-CPU underutilizes cores for this
 model size, so process-level parallelism ≈ free wall-clock).
 
-Also fig 3: overlap-ratio sweep {0, .125, .25, .375, .5} on EAHES-O.
+Also fig 3: overlap-ratio sweep {0, .125, .25, .375, .5} on EAHES-O, and a
+beyond-paper scenario axis (``--what scenarios``): every failure regime from
+``repro.core.scenarios`` × {EASGD, EAHES-O, DEAHES-O} at k=4/τ=1.
 
 Results land in results/paper_repro/*.json; summarize() renders the tables
 consumed by EXPERIMENTS.md §Repro.
@@ -20,21 +22,26 @@ import time
 RESULTS = "results/paper_repro"
 
 
-def job_cmd(method, k, tau, seed, rounds, out, overlap=None):
+def job_cmd(method, k, tau, seed, rounds, out, overlap=None, scenario=None):
     cmd = [sys.executable, "-m", "repro.experiments.paper_repro",
            "--method", method, "--k", str(k), "--tau", str(tau),
            "--seed", str(seed), "--rounds", str(rounds), "--out", out]
     if overlap is not None:
         cmd += ["--overlap-ratio", str(overlap)]
+    if scenario is not None:
+        cmd += ["--failure-scenario", scenario]
     return cmd
 
 
 def run_pool(jobs, max_procs=5):
+    """Run jobs as a bounded subprocess pool; returns the list of failed job
+    names (empty when everything exited 0)."""
     procs = []
     t0 = time.time()
     pending = list(jobs)
     done = 0
     total = len(pending)
+    failed = []
     while pending or procs:
         while pending and len(procs) < max_procs:
             name, cmd = pending.pop(0)
@@ -50,10 +57,13 @@ def run_pool(jobs, max_procs=5):
             else:
                 done += 1
                 status = "ok" if p.returncode == 0 else f"FAIL({p.returncode})"
+                if p.returncode != 0:
+                    failed.append(name)
                 print(f"[{time.time()-t0:7.1f}s] {done}/{total} {name}: "
                       f"{status}", flush=True)
         procs = still
         time.sleep(2.0)
+    return failed
 
 
 # Communication-round budget per τ (single-core container: τ=4 costs 4×
@@ -76,6 +86,23 @@ def grid_jobs(rounds=None, seeds=(0,), methods=None, ks=(4, 8),
             continue
         jobs.append((f"{m} k={k} τ={tau} s={s}",
                      job_cmd(m, k, tau, s, r, out)))
+    return jobs
+
+
+def scenario_jobs(rounds=12, seeds=(0,), scenarios=None,
+                  methods=("EASGD", "EAHES-O", "DEAHES-O"), k=4, tau=1):
+    """Failure-regime axis: every scenario from the engine × the headline
+    methods, at the paper's k=4/τ=1 operating point."""
+    from repro.configs.base import FAILURE_SCENARIOS
+
+    scenarios = scenarios or FAILURE_SCENARIOS
+    jobs = []
+    for sc, m, s in itertools.product(scenarios, methods, seeds):
+        out = f"{RESULTS}/scen_{sc}_{m}_k{k}_tau{tau}_s{s}.json"
+        if os.path.exists(out):
+            continue
+        jobs.append((f"{m} scen={sc} s={s}",
+                     job_cmd(m, k, tau, s, rounds, out, scenario=sc)))
     return jobs
 
 
@@ -106,7 +133,8 @@ def main():
                     help="override the per-τ round budget")
     ap.add_argument("--seeds", type=int, default=1)
     ap.add_argument("--max-procs", type=int, default=1)
-    ap.add_argument("--what", default="all", choices=["all", "fig45", "fig3"])
+    ap.add_argument("--what", default="all",
+                    choices=["all", "fig45", "fig3", "scenarios"])
     args = ap.parse_args()
     seeds = tuple(range(args.seeds))
     jobs = []
@@ -114,8 +142,14 @@ def main():
         jobs += grid_jobs(args.rounds, seeds)
     if args.what in ("all", "fig3"):
         jobs += overlap_jobs(args.rounds or 16, seeds)
+    if args.what in ("all", "scenarios"):
+        jobs += scenario_jobs(args.rounds or 12, seeds)
     print(f"{len(jobs)} jobs")
-    run_pool(jobs, args.max_procs)
+    failed = run_pool(jobs, args.max_procs)
+    if failed:
+        print(f"{len(failed)} job(s) failed: " + ", ".join(failed),
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -8,7 +8,9 @@ Methods (paper §VI):
     EAHES-OM  — EAHES-O + oracle α schedule (knows the failure schedule)
     DEAHES-O  — EAHES-O + dynamic weighting (the paper's method)
 
-Failure model: worker↔master communication suppressed w.p. 1/3 per round.
+Failure model: worker↔master communication suppressed w.p. 1/3 per round by
+default; ``--failure-scenario`` swaps in any regime from the scenario engine
+(``repro.core.scenarios``): bursty, rack-correlated, stragglers, crash/restart.
 Dataset: synthetic MNIST proxy (MNIST unavailable offline — see DESIGN.md),
 model: the paper's 2-conv CNN. Metrics per communication round: master
 train-loss and master test-accuracy, written as JSON.
@@ -25,9 +27,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+from repro.configs.base import (FAILURE_SCENARIOS, ElasticConfig,
+                                OptimizerConfig, get_config)
 from repro.core.coordinator import ElasticTrainer
-from repro.core.failure import failure_schedule_np
+from repro.core.scenarios import make_scenario
 from repro.data.pipeline import WorkerBatcher
 from repro.data.synthetic import SyntheticImages
 from repro.models.registry import build_model
@@ -65,6 +68,7 @@ def run_one(
     eval_every: int = 2,
     out_path: Optional[str] = None,
     score_k: float = -0.05,
+    failure_scenario: str = "iid",
 ):
     opt_name, dynamic, oracle, use_overlap = METHODS[method]
     r = (overlap_ratio if overlap_ratio is not None
@@ -72,7 +76,7 @@ def run_one(
     ecfg = ElasticConfig(
         num_workers=k, tau=tau, alpha=ALPHA, overlap_ratio=r,
         failure_prob=failure_prob, dynamic=dynamic, oracle=oracle,
-        score_k=score_k)
+        score_k=score_k, failure_scenario=failure_scenario)
     ocfg = OptimizerConfig(name=opt_name, lr=LR, momentum=0.5,
                            betas=(0.9, 0.999), hutchinson_samples=1)
 
@@ -83,27 +87,33 @@ def run_one(
     ds = SyntheticImages(n=n_data, n_test=n_test, seed=0)  # same data ∀ runs
     wb = WorkerBatcher(ds.images, ds.labels, ecfg, batch_size=batch_size,
                        seed=seed)
-    sched = failure_schedule_np(seed + 7, rounds, k, failure_prob)
+    sched = make_scenario(ecfg).schedule(seed + 7, rounds, k)
     test = {key: jnp.asarray(val) for key, val in ds.test_batch().items()}
 
-    curves = {"round": [], "train_loss": [], "test_acc": [], "score": [],
-              "h2": []}
+    curves = {"round": [], "train_loss": [], "test_loss": [], "test_acc": [],
+              "score": [], "h2": []}
     t0 = time.time()
     for rd in range(rounds):
         batches = {key: jnp.asarray(val)
                    for key, val in wb.round_batches().items()}
-        fail = jnp.asarray(sched[rd])
+        fail = jnp.asarray(sched.fail[rd])
         # oracle (EAHES-OM): snap-back exactly on the first successful sync
         # after a missed one — "as if we know when a node will fail" (§VI)
-        recent = jnp.asarray(sched[rd - 1] if rd > 0
+        recent = jnp.asarray(sched.fail[rd - 1] if rd > 0
                              else np.zeros(k, bool))
+        straggle = (jnp.asarray(sched.straggle[rd])
+                    if sched.has_stragglers else None)
+        restart = (jnp.asarray(sched.restart[rd])
+                   if sched.has_restarts else None)
         state, m = trainer.round_step(
-            state, batches, jax.random.key(seed * 1000 + rd), fail, recent)
+            state, batches, jax.random.key(seed * 1000 + rd), fail, recent,
+            straggle, restart)
         if rd % eval_every == 0 or rd == rounds - 1:
             acc = float(trainer.master_accuracy(state, test))
             tl = float(trainer.master_loss(state, test))
             curves["round"].append(rd)
             curves["train_loss"].append(float(m["loss"]))
+            curves["test_loss"].append(tl)
             curves["test_acc"].append(acc)
             curves["score"].append(np.asarray(m["score"]).tolist())
             curves["h2"].append(np.asarray(m["h2"]).tolist())
@@ -111,7 +121,8 @@ def run_one(
     result = {
         "method": method, "k": k, "tau": tau, "seed": seed,
         "rounds": rounds, "overlap_ratio": r, "alpha": ALPHA,
-        "failure_prob": failure_prob, "curves": curves,
+        "failure_prob": failure_prob, "failure_scenario": failure_scenario,
+        "curves": curves,
         "final_acc": curves["test_acc"][-1],
         "wall_s": round(time.time() - t0, 1),
     }
@@ -132,11 +143,13 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--overlap-ratio", type=float, default=None)
+    ap.add_argument("--failure-scenario", default="iid",
+                    choices=FAILURE_SCENARIOS)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     res = run_one(args.method, args.k, args.tau, args.seed,
                   rounds=args.rounds, overlap_ratio=args.overlap_ratio,
-                  out_path=args.out)
+                  out_path=args.out, failure_scenario=args.failure_scenario)
     print(json.dumps({k: v for k, v in res.items() if k != "curves"}))
 
 

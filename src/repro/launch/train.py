@@ -21,10 +21,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpoint
-from repro.configs.base import (ElasticConfig, OptimizerConfig, ShapeConfig,
-                                get_config)
+from repro.configs.base import (FAILURE_SCENARIOS, ElasticConfig,
+                                OptimizerConfig, ShapeConfig, get_config)
 from repro.core.coordinator import ElasticTrainer
-from repro.core.failure import failure_schedule_np
+from repro.core.scenarios import make_scenario
 from repro.data.pipeline import TokenWorkerBatcher, WorkerBatcher
 from repro.data.synthetic import SyntheticImages, SyntheticTokens
 from repro.models.registry import build_model
@@ -46,6 +46,10 @@ def main(argv=None):
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--overlap", type=float, default=0.25)
     ap.add_argument("--failure-prob", type=float, default=1 / 3)
+    ap.add_argument("--failure-scenario", default="iid",
+                    choices=FAILURE_SCENARIOS,
+                    help="failure regime injected into the run "
+                         "(see repro/core/scenarios.py)")
     ap.add_argument("--no-dynamic", action="store_true")
     ap.add_argument("--comm-mode", default="sequential",
                     choices=("sequential", "fused"),
@@ -92,25 +96,35 @@ def main(argv=None):
     ecfg = ElasticConfig(
         num_workers=args.workers, tau=args.tau, alpha=args.alpha,
         overlap_ratio=args.overlap, failure_prob=args.failure_prob,
-        dynamic=not args.no_dynamic, comm_mode=args.comm_mode)
+        dynamic=not args.no_dynamic, comm_mode=args.comm_mode,
+        failure_scenario=args.failure_scenario)
     trainer = ElasticTrainer(model, ocfg, ecfg)
     state = trainer.init_state(jax.random.key(args.seed))
     wb = make_batcher(ecfg)
-    sched = failure_schedule_np(args.seed + 7, args.rounds, args.workers,
-                                args.failure_prob)
+    sched = make_scenario(ecfg).schedule(args.seed + 7, args.rounds,
+                                         args.workers)
     t0 = time.time()
     for r in range(args.rounds):
         batches = {k: jnp.asarray(v) for k, v in wb.round_batches().items()}
-        fail = jnp.asarray(sched[r])
-        recent = jnp.asarray(
-            sched[max(0, r - ecfg.score_window):r + 1].any(axis=0))
+        fail = jnp.asarray(sched.fail[r])
+        recent = jnp.asarray(sched.failed_recent(r, ecfg.score_window))
+        # keep the None fast path (single trace) when a mask never fires
+        straggle = (jnp.asarray(sched.straggle[r])
+                    if sched.has_stragglers else None)
+        restart = (jnp.asarray(sched.restart[r])
+                   if sched.has_restarts else None)
         state, m = trainer.round_step(
             state, batches, jax.random.key(args.seed * 997 + r), fail,
-            recent)
+            recent, straggle, restart)
+        extra = ""
+        if sched.has_stragglers:
+            extra += f" straggle={sched.straggle[r].astype(int).tolist()}"
+        if sched.has_restarts:
+            extra += f" restart={sched.restart[r].astype(int).tolist()}"
         print(f"round {r}: loss={float(m['loss']):.4f} "
-              f"fails={np.asarray(fail).astype(int).tolist()} "
+              f"fails={sched.fail[r].astype(int).tolist()} "
               f"score={np.asarray(m['score']).round(3).tolist()} "
-              f"h2={np.asarray(m['h2']).round(3).tolist()} "
+              f"h2={np.asarray(m['h2']).round(3).tolist()}{extra} "
               f"({time.time()-t0:.1f}s)", flush=True)
     if args.save:
         checkpoint.save(args.save, state["master"],

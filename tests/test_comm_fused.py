@@ -2,17 +2,20 @@
 
 Covers the ISSUE-1 acceptance surface: master equivalence under uniform h2,
 batched-kernel-vs-ref allclose in interpret mode, and fail-mask suppression
-parity between the two comm modes.
+parity between the two comm modes — plus (ISSUE-2) the same equivalence
+under every failure scenario from the engine, not just the i.i.d. mask.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+from repro.configs.base import (FAILURE_SCENARIOS, ElasticConfig,
+                                OptimizerConfig, get_config)
 from repro.core import dynamic_weight as dw
 from repro.core.coordinator import ElasticTrainer
 from repro.core.elastic import elastic_update, elastic_update_batched
+from repro.core.scenarios import make_scenario
 from repro.kernels.elastic.ops import elastic_update_batched_pallas
 from repro.models.registry import build_model
 
@@ -202,6 +205,67 @@ def test_fused_dynamic_mode_runs_and_reacts():
     assert float(m["score"][0]) < -0.05
     assert float(m["h1"][0]) == pytest.approx(1.0)
     assert float(m["h2"][0]) == pytest.approx(0.0)
+
+
+@pytest.fixture(scope="module")
+def scenario_rig():
+    """One jitted trainer pair shared by every scenario param (the scenario
+    shapes only the schedule, not the comm trace). An all-False straggle
+    mask takes the stale-scoring code path but scores against the live
+    master bit-for-bit."""
+    trs = _trainer(4, "sequential")
+    trf = _trainer(4, "fused")
+    return (
+        trs,
+        jax.jit(lambda st, f, sg: trs.comm_phase(st, f, straggle=sg)),
+        jax.jit(lambda st, f, sg: trf.comm_phase(st, f, straggle=sg)),
+        jax.jit(trs.apply_restarts),
+    )
+
+
+@pytest.mark.parametrize("scenario", FAILURE_SCENARIOS)
+def test_fused_master_matches_sequential_under_scenario(scenario, scenario_rig):
+    """Sequential and fused comm produce the same master under every failure
+    regime (uniform h2): per round, from a common state — including restart
+    resets and straggler stale-master scoring — the two backends' masters
+    agree and suppressed workers exchange nothing in either mode."""
+    k, rounds = 4, 6
+    trs, comm_s, comm_f, restarts = scenario_rig
+    sched = make_scenario(
+        ElasticConfig(num_workers=k, failure_scenario=scenario)
+    ).schedule(5, rounds, k)
+    assert (sched.fail.any() or sched.straggle.any()), \
+        "scenario schedule has no events — test is vacuous"
+    state = _desynced_state(trs)
+    for r in range(rounds):
+        fail = jnp.asarray(sched.fail[r])
+        straggle = jnp.asarray(sched.straggle[r])
+        if sched.has_restarts:
+            state = restarts(state, jnp.asarray(sched.restart[r]))
+        ns, _ = comm_s(state, fail, straggle)
+        nf, _ = comm_f(state, fail, straggle)
+        for a, b in zip(jax.tree.leaves(ns["master"]),
+                        jax.tree.leaves(nf["master"])):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-5, atol=1e-6)
+        for i in np.flatnonzero(sched.fail[r]):
+            before = jax.tree.leaves(
+                jax.tree.map(lambda x: x[i], state["workers"]))
+            for new in (ns, nf):
+                after = jax.tree.leaves(
+                    jax.tree.map(lambda x: x[i], new["workers"]))
+                for a, b in zip(before, after):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+        # advance canonically on the sequential state, re-desynced so the
+        # next round's distances stay non-trivial (stands in for the
+        # mode-independent local phase)
+        state = dict(ns)
+        state["workers"] = jax.tree.map(
+            lambda x: x + jax.random.normal(
+                jax.random.key(100 + r), x.shape, x.dtype) * 0.05,
+            state["workers"])
 
 
 def test_fused_round_counter_and_hist_shapes():

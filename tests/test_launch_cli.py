@@ -42,3 +42,19 @@ def test_train_cli_checkpoint_roundtrip(tmp_path, capsys):
     tree, meta = checkpoint.restore(path)
     assert meta["rounds"] == 1
     assert "conv1" in tree
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario", ["iid", "burst", "correlated",
+                                      "straggler", "crash_restart"])
+def test_train_cli_failure_scenarios_end_to_end(capsys, scenario):
+    """Every scenario is selectable from the CLI and drives a full round
+    loop (τ=2 so straggler slowdown actually bites)."""
+    train_cli.main([
+        "--arch", "paper-cnn", "--rounds", "2", "--workers", "2",
+        "--tau", "2", "--batch-size", "8", "--failure-scenario", scenario,
+        "--seed", "3"])
+    out = capsys.readouterr().out
+    assert "round 1" in out and "score=" in out
+    if scenario == "straggler":
+        assert "straggle=" in out
