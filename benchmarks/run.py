@@ -1,17 +1,39 @@
-"""Benchmark harness — one section per paper table/figure plus the roofline
-and kernel microbenches. Prints ``name,us_per_call,derived`` CSV."""
-import sys
+"""Benchmark harness — one section per paper table/figure plus the roofline,
+kernel microbenches and the session-API driver benchmark. Prints
+``name,us_per_call,derived`` CSV; ``--what session`` instead emits a single
+JSON record comparing per-round vs jit-chunked session wall time."""
+import argparse
+import json
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--what", default="all",
+                    choices=["all", "kernels", "comm_modes", "paper",
+                             "roofline", "session"])
+    args = ap.parse_args(argv)
+
+    if args.what == "session":
+        from benchmarks import session_bench
+
+        print(json.dumps(session_bench.bench_session()))
+        return
+
+    from benchmarks import (kernels_bench, paper_figs, roofline_bench,
+                            session_bench)
+
     sections = []
-    from benchmarks import kernels_bench, paper_figs, roofline_bench
-
-    sections.append(("kernels", kernels_bench.bench))
-    sections.append(("comm_modes", kernels_bench.bench_comm_modes))
-    sections.append(("paper_fig3_overlap", paper_figs.bench_fig3))
-    sections.append(("paper_fig45_convergence", paper_figs.bench_fig45))
-    sections.append(("roofline", roofline_bench.bench))
+    if args.what in ("all", "kernels"):
+        sections.append(("kernels", kernels_bench.bench))
+    if args.what in ("all", "comm_modes"):
+        sections.append(("comm_modes", kernels_bench.bench_comm_modes))
+    if args.what in ("all", "paper"):
+        sections.append(("paper_fig3_overlap", paper_figs.bench_fig3))
+        sections.append(("paper_fig45_convergence", paper_figs.bench_fig45))
+    if args.what in ("all", "roofline"):
+        sections.append(("roofline", roofline_bench.bench))
+    if args.what == "all":
+        sections.append(("session", session_bench.bench))
 
     print("name,us_per_call,derived")
     for name, fn in sections:

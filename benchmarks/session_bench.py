@@ -1,0 +1,55 @@
+"""Session execution benchmark: per-round dispatch vs jit-scanned chunks.
+
+Times the *whole driver path* — host batching, mask slicing, jit dispatch,
+device compute — through ``ElasticSession`` at ``rounds_per_call=1`` vs a
+chunked setting, on the paper CNN at a size where per-round Python/dispatch
+overhead is a visible fraction of the round. Compilation is excluded by
+warming each session up over its first chunk(s) before the timed window;
+both settings reuse one session (the jit cache keys on the trainer
+instance, so a fresh session would recompile).
+
+``bench_session()`` returns the JSON-able record consumed by
+``benchmarks/run.py --what session``; ``bench()`` adapts it to the CSV
+section format of the main harness.
+"""
+import time
+
+
+def bench_session(rounds=8, chunk=4, warmup_rounds=None):
+    from repro.api import ElasticSession, RunSpec
+    from repro.configs.base import ElasticConfig, OptimizerConfig
+
+    base = RunSpec(
+        arch="paper-cnn",
+        optimizer=OptimizerConfig(name="sgd", lr=0.01),
+        elastic=ElasticConfig(num_workers=4, tau=1, dynamic=True),
+        seed=0, batch_size=8, n_data=512, n_test=64)
+    record = {"what": "session", "arch": base.arch,
+              "workers": base.elastic.num_workers, "tau": base.elastic.tau,
+              "batch_size": base.batch_size, "rounds_timed": rounds,
+              "chunk": chunk}
+    for label, rpc in (("per_round", 1), ("chunked", chunk)):
+        warm = warmup_rounds or rpc
+        sess = ElasticSession(base.replace(rounds_per_call=rpc,
+                                           rounds=warm + rounds))
+        sess.run(warm)  # compile + first-touch outside the timed window
+        t0 = time.perf_counter()
+        sess.run(rounds)
+        ms = (time.perf_counter() - t0) / rounds * 1e3
+        record[f"{label}_ms_per_round"] = round(ms, 3)
+    record["speedup"] = round(record["per_round_ms_per_round"]
+                              / record["chunked_ms_per_round"], 3)
+    return record
+
+
+def bench():
+    """CSV-section adapter for benchmarks/run.py."""
+    r = bench_session()
+    return [
+        ("session_per_round", r["per_round_ms_per_round"] * 1e3,
+         "ms_per_round*1e3=us"),
+        (f"session_chunked_R{r['chunk']}",
+         r["chunked_ms_per_round"] * 1e3, "ms_per_round*1e3=us"),
+        ("session_chunk_speedup", r["speedup"],
+         f"per_round/chunked at R={r['chunk']}"),
+    ]

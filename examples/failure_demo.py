@@ -3,7 +3,8 @@ mechanism — u (log distance), raw score a, and the h1/h2 weights — before,
 during, and after each fault.
 
 The default ``outage`` scenario is the hand-crafted original: worker 0 loses
-master contact for rounds 4–8. ``--scenario`` swaps in any regime from the
+master contact for rounds 4–8, injected as a custom ``ScenarioSchedule``
+through ``RunSpec.schedule``. ``--scenario`` swaps in any regime from the
 scenario engine (``repro.core.scenarios``) by name:
 
     PYTHONPATH=src python examples/failure_demo.py
@@ -12,17 +13,12 @@ scenario engine (``repro.core.scenarios``) by name:
 """
 import argparse
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ElasticSession, RunSpec
 from repro.configs.base import (FAILURE_SCENARIOS, ElasticConfig,
-                                OptimizerConfig, get_config)
-from repro.core.coordinator import ElasticTrainer
-from repro.core.scenarios import ScenarioSchedule, make_scenario
-from repro.data.pipeline import WorkerBatcher
-from repro.data.synthetic import SyntheticImages
-from repro.models.registry import build_model
+                                OptimizerConfig)
+from repro.core.scenarios import ScenarioSchedule
 
 
 def outage_schedule(rounds, k):
@@ -42,46 +38,29 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    model = build_model(get_config("paper-cnn"))
     ecfg = ElasticConfig(num_workers=args.workers, tau=1, alpha=0.1,
                          overlap_ratio=0.25, dynamic=True,
                          failure_scenario=(args.scenario
                                            if args.scenario != "outage"
                                            else "iid"))
-    trainer = ElasticTrainer(model,
-                             OptimizerConfig(name="adahessian", lr=0.01),
-                             ecfg)
-    state = trainer.init_state(jax.random.key(args.seed))
-    ds = SyntheticImages(n=2000, n_test=300)
-    batcher = WorkerBatcher(ds.images, ds.labels, ecfg, batch_size=32)
-
-    if args.scenario == "outage":
-        sched = outage_schedule(args.rounds, args.workers)
-    else:
-        sched = make_scenario(ecfg).schedule(args.seed + 7, args.rounds,
-                                             args.workers)
+    spec = RunSpec(
+        arch="paper-cnn",
+        optimizer=OptimizerConfig(name="adahessian", lr=0.01),
+        elastic=ecfg, rounds=args.rounds, seed=args.seed,
+        schedule=(outage_schedule(args.rounds, args.workers)
+                  if args.scenario == "outage" else None),
+        batch_size=32, n_data=2000, n_test=300, eval_every=1)
+    sess = ElasticSession(spec)
 
     print(f"scenario={args.scenario}  (F=comm fail, S=straggle, R=restart; "
           f"worker-0 column shown)")
     print(" rnd | F S R |      u0      a0     h1_0   h2_0 |  master_acc")
-    test = {k: jnp.asarray(v) for k, v in ds.test_batch().items()}
-    for rnd in range(args.rounds):
-        batches = {k: jnp.asarray(v)
-                   for k, v in batcher.round_batches().items()}
-        fail = jnp.asarray(sched.fail[rnd])
-        recent = jnp.asarray(sched.failed_recent(rnd, ecfg.score_window))
-        straggle = (jnp.asarray(sched.straggle[rnd])
-                    if sched.has_stragglers else None)
-        restart = (jnp.asarray(sched.restart[rnd])
-                   if sched.has_restarts else None)
-        state, m = trainer.round_step(state, batches, jax.random.key(rnd),
-                                      fail, recent, straggle, restart)
-        acc = float(trainer.master_accuracy(state, test))
-        print(f"  {rnd:2d} | {int(sched.fail[rnd, 0])} "
-              f"{int(sched.straggle[rnd, 0])} {int(sched.restart[rnd, 0])} "
-              f"| {float(m['u'][0]):8.3f} {float(m['score'][0]):8.4f} "
-              f"{float(m['h1'][0]):6.3f} {float(m['h2'][0]):6.3f} |"
-              f"    {acc:.3f}")
+    for rec in sess.run_iter():
+        print(f"  {rec.round:2d} | {int(rec.fail[0])} "
+              f"{int(rec.straggle[0])} {int(rec.restart[0])} "
+              f"| {float(rec.u[0]):8.3f} {float(rec.score[0]):8.4f} "
+              f"{float(rec.h1[0]):6.3f} {float(rec.h2[0]):6.3f} |"
+              f"    {rec.eval_acc:.3f}")
 
     print("\nWhile a worker is cut off (or straggling) its u drifts; when it "
           "reconnects — or rejoins reset to the master after a crash — the "

@@ -1,4 +1,4 @@
-"""Quickstart: the paper's system in ~40 lines.
+"""Quickstart: the paper's system in ~20 lines via the session API.
 
 Trains the paper's CNN with k=4 elastic AdaHessian workers under a 1/3
 communication-failure rate, with dynamic weighting (DEAHES-O). Prints the
@@ -6,42 +6,26 @@ per-round raw scores and h1/h2 weights so you can watch the mechanism react.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
-from repro.core.coordinator import ElasticTrainer
-from repro.core.failure import failure_schedule_np
-from repro.data.pipeline import WorkerBatcher
-from repro.data.synthetic import SyntheticImages
-from repro.models.registry import build_model
+from repro.api import ElasticSession, RunSpec
+from repro.configs.base import ElasticConfig, OptimizerConfig
 
-ROUNDS = 10
+spec = RunSpec(
+    arch="paper-cnn",
+    optimizer=OptimizerConfig(name="adahessian", lr=0.01),
+    elastic=ElasticConfig(num_workers=4, tau=1, alpha=0.1,
+                          overlap_ratio=0.25, failure_prob=1 / 3,
+                          dynamic=True),
+    rounds=10, seed=0, batch_size=32, n_data=4000, n_test=500,
+    eval_every=1)
 
-model = build_model(get_config("paper-cnn"))
-ecfg = ElasticConfig(num_workers=4, tau=1, alpha=0.1, overlap_ratio=0.25,
-                     failure_prob=1 / 3, dynamic=True)
-trainer = ElasticTrainer(model, OptimizerConfig(name="adahessian", lr=0.01),
-                         ecfg)
-
-state = trainer.init_state(jax.random.key(0))
-ds = SyntheticImages(n=4000, n_test=500)
-batcher = WorkerBatcher(ds.images, ds.labels, ecfg, batch_size=32)
-schedule = failure_schedule_np(7, ROUNDS, 4, ecfg.failure_prob)
-test = {k: jnp.asarray(v) for k, v in ds.test_batch().items()}
-
-for rnd in range(ROUNDS):
-    batches = {k: jnp.asarray(v) for k, v in batcher.round_batches().items()}
-    fails = jnp.asarray(schedule[rnd])
-    state, m = trainer.round_step(
-        state, batches, jax.random.key(rnd), fails, jnp.zeros(4, bool))
-    acc = trainer.master_accuracy(state, test)
-    print(f"round {rnd:2d} | loss {float(m['loss']):6.3f} | "
-          f"master acc {float(acc):.3f} | "
-          f"fails {np.asarray(fails).astype(int)} | "
-          f"score {np.asarray(m['score']).round(3)} | "
-          f"h2 {np.asarray(m['h2']).round(3)}")
+for rec in ElasticSession(spec).run_iter():
+    print(f"round {rec.round:2d} | loss {rec.loss:6.3f} | "
+          f"master acc {rec.eval_acc:.3f} | "
+          f"fails {rec.fail.astype(int)} | "
+          f"score {np.asarray(rec.score).round(3)} | "
+          f"h2 {np.asarray(rec.h2).round(3)}")
 
 print("\nDynamic weighting kept the master safe from suppressed workers;"
       " see EXPERIMENTS.md §Repro for the full paper grid.")

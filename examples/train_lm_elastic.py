@@ -1,9 +1,11 @@
 """End-to-end driver: train a transformer LM under elastic averaging with
-dynamic weighting — the paper's system applied to a real architecture.
+dynamic weighting — the paper's system applied to a real architecture,
+driven through ``repro.api.ElasticSession``.
 
 Default preset trains a ~10M-param qwen3-family model for 60 rounds on the
 synthetic token stream (CPU-friendly). ``--preset 100m`` scales to a ~100M
-model / 300 rounds for real hardware:
+model / 300 rounds for real hardware; ``--rounds-per-call`` amortizes the
+per-round driver dispatch into jit-scanned chunks:
 
     PYTHONPATH=src python examples/train_lm_elastic.py              # CI-size
     PYTHONPATH=src python examples/train_lm_elastic.py --preset 100m
@@ -11,17 +13,10 @@ model / 300 rounds for real hardware:
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import checkpoint
+from repro.api import ElasticSession, RunSpec
 from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
-from repro.core.coordinator import ElasticTrainer
-from repro.core.failure import failure_schedule_np
-from repro.data.pipeline import TokenWorkerBatcher
-from repro.data.synthetic import SyntheticTokens
-from repro.models.registry import build_model
 
 PRESETS = {
     # name: (d_model, layers, heads, d_ff, seq, batch, rounds)
@@ -36,6 +31,7 @@ def main():
     ap.add_argument("--preset", default="ci", choices=sorted(PRESETS))
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--rounds-per-call", type=int, default=1)
     ap.add_argument("--save", default=None)
     args = ap.parse_args()
 
@@ -44,36 +40,29 @@ def main():
         name=f"qwen3-{args.preset}", num_layers=L, d_model=d, num_heads=H,
         num_kv_heads=max(1, H // 4), head_dim=d // H, d_ff=ff,
         vocab_size=4096, dtype="float32", param_dtype="float32")
-    model = build_model(cfg)
 
-    ecfg = ElasticConfig(num_workers=args.workers, tau=args.tau, alpha=0.1,
-                         overlap_ratio=0.25, failure_prob=1 / 3,
-                         dynamic=True)
-    trainer = ElasticTrainer(model, OptimizerConfig(name="adahessian",
-                                                    lr=0.002), ecfg)
-    state = trainer.init_state(jax.random.key(0))
+    spec = RunSpec(
+        model_cfg=cfg,
+        optimizer=OptimizerConfig(name="adahessian", lr=0.002),
+        elastic=ElasticConfig(num_workers=args.workers, tau=args.tau,
+                              alpha=0.1, overlap_ratio=0.25,
+                              failure_prob=1 / 3, dynamic=True),
+        rounds=rounds, rounds_per_call=args.rounds_per_call,
+        seed=0, scenario_seed=3, batch_size=bsz, seq_len=seq,
+        n_tokens=400_000)
+    sess = ElasticSession(spec)
     from repro.nn.param import param_count
 
-    print(f"model: {cfg.name}  params={param_count(model.spec):,}")
+    print(f"model: {cfg.name}  params={param_count(sess.model.spec):,}")
 
-    stream = SyntheticTokens(vocab=cfg.vocab_size, n_tokens=400_000)
-    batcher = TokenWorkerBatcher(stream.tokens, ecfg, batch_size=bsz,
-                                 seq_len=seq)
-    sched = failure_schedule_np(3, rounds, args.workers, ecfg.failure_prob)
     t0 = time.time()
-    for rnd in range(rounds):
-        batches = {k: jnp.asarray(v)
-                   for k, v in batcher.round_batches().items()}
-        state, m = trainer.round_step(
-            state, batches, jax.random.key(rnd), jnp.asarray(sched[rnd]),
-            jnp.zeros(args.workers, bool))
-        if rnd % 5 == 0 or rnd == rounds - 1:
-            print(f"round {rnd:3d} | worker loss {float(m['loss']):6.3f} | "
-                  f"h2 {np.asarray(m['h2']).round(3)} | "
+    for rec in sess.run_iter():
+        if rec.round % 5 == 0 or rec.round == rounds - 1:
+            print(f"round {rec.round:3d} | worker loss {rec.loss:6.3f} | "
+                  f"h2 {np.asarray(rec.h2).round(3)} | "
                   f"{time.time()-t0:6.1f}s", flush=True)
     if args.save:
-        checkpoint.save(args.save, state["master"],
-                        metadata={"rounds": rounds, "preset": args.preset})
+        sess.save(args.save, extra_metadata={"preset": args.preset})
         print("saved:", args.save)
 
 

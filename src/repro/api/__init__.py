@@ -1,0 +1,21 @@
+"""Unified run API for the paper's system (ISSUE-3).
+
+One import surface for every driver — CLI, experiments, examples, tests,
+benchmarks:
+
+    from repro.api import ElasticSession, RoundRecord, RunSpec
+
+    spec = RunSpec(arch="paper-cnn", rounds=20, rounds_per_call=4)
+    for rec in ElasticSession(spec).run_iter():
+        print(rec.round, rec.loss, rec.h2)
+
+:class:`RunSpec` captures everything a run needs (architecture, optimizer,
+elastic/failure config, data source, scenario, seed, eval cadence,
+checkpoint path); :class:`ElasticSession` owns the trainer state, failure
+schedule, batcher and eval, and yields structured :class:`RoundRecord`\\ s.
+``rounds_per_call > 1`` executes whole chunks of rounds inside one jit
+(``ElasticTrainer.round_chunk``) bit-identically to per-round execution.
+"""
+from repro.api.session import ElasticSession, RoundRecord, RunSpec
+
+__all__ = ["ElasticSession", "RoundRecord", "RunSpec"]

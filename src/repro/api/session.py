@@ -1,0 +1,353 @@
+"""`RunSpec` → `ElasticSession`: the one driver for the paper's system.
+
+Before ISSUE-3 the repo carried five hand-rolled copies of the same loop
+(train CLI, paper_repro, grid, both examples), each re-deriving batchers,
+failure schedules, mask conversion and the 7-positional-argument round call,
+with semantics drifting between copies. This module replaces all of them:
+
+- :class:`RunSpec` is a frozen, validated description of a run —
+  architecture (or explicit :class:`ModelConfig`), optimizer, elastic /
+  failure configuration, synthetic-data sizes, seeds, eval cadence,
+  checkpoint path, and ``rounds_per_call``.
+- :class:`ElasticSession` owns the mutable half: trainer state, the
+  precomputed :class:`ScenarioSchedule`, the worker batcher, and the eval
+  batch. ``run()`` / ``run_iter()`` yield one :class:`RoundRecord` per
+  simulated round.
+
+Chunked execution (the speed headline): with ``rounds_per_call = R`` the
+session stacks R rounds of batches, masks and PRNG keys into one
+:class:`RoundInputs` whose leaves carry a leading (R,) axis and calls
+``ElasticTrainer.round_chunk`` — a ``lax.scan`` over the identical round
+body inside a single jit — so per-round Python/dispatch overhead (the
+DaSGD-style driver tax) is paid once per chunk. Chunked and per-round
+execution are bit-identical (``tests/test_session.py`` asserts master-param
+equality); chunk boundaries are snapped to eval rounds so the eval cadence
+never changes results. Scenarios that never straggle/restart keep those
+inputs ``None``, preserving the specialized single-trace fast path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint
+from repro.configs.base import (ElasticConfig, ModelConfig, OptimizerConfig,
+                                get_config)
+from repro.core.coordinator import ElasticTrainer, RoundInputs
+from repro.core.scenarios import ScenarioSchedule, make_scenario
+from repro.data.pipeline import TokenWorkerBatcher, WorkerBatcher
+from repro.data.synthetic import SyntheticImages, SyntheticTokens
+from repro.models.registry import build_model
+from repro.train.steps import init_train_state, make_train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Everything a run needs, validated at construction.
+
+    ``arch``/``smoke`` name a registered config; ``model_cfg`` (when given)
+    overrides both. ``plain=True`` is the single-worker control (the k=1
+    limit with no elastic sync, no failures): one "round" is one optimizer
+    step. The synthetic data source follows the model family — images +
+    :class:`WorkerBatcher` for ``cnn``, token stream +
+    :class:`TokenWorkerBatcher` otherwise. ``data_seed`` seeds dataset
+    *generation* (keep it fixed across methods to compare on identical
+    data, as paper §VI does); ``seed`` seeds init, batching and the
+    per-round PRNG; the failure schedule draws from ``scenario_seed``
+    (default ``seed + 7``, the historical convention). ``schedule``
+    injects a hand-crafted :class:`ScenarioSchedule` instead of the
+    scenario engine (e.g. the failure demo's deterministic outage).
+    """
+
+    arch: str = "paper-cnn"
+    smoke: bool = False
+    model_cfg: Optional[ModelConfig] = None
+    optimizer: OptimizerConfig = dataclasses.field(
+        default_factory=OptimizerConfig)
+    elastic: ElasticConfig = dataclasses.field(default_factory=ElasticConfig)
+    rounds: int = 20
+    rounds_per_call: int = 1
+    seed: int = 0
+    scenario_seed: Optional[int] = None
+    schedule: Optional[ScenarioSchedule] = None
+    plain: bool = False
+    # synthetic data source (family-dependent)
+    batch_size: int = 32
+    seq_len: int = 128
+    n_data: int = 8000
+    n_test: int = 1000
+    n_tokens: int = 100_000
+    data_seed: int = 0
+    # eval / io
+    eval_every: int = 0  # 0 = never; >0 = every e rounds + the final round
+    save_path: Optional[str] = None
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        for name in ("rounds", "rounds_per_call", "batch_size", "seq_len",
+                     "n_data", "n_test", "n_tokens"):
+            v = getattr(self, name)
+            if v < 1:
+                raise ValueError(f"RunSpec.{name} must be >= 1, got {v}")
+        if self.eval_every < 0:
+            raise ValueError(
+                f"RunSpec.eval_every must be >= 0, got {self.eval_every}")
+        if self.schedule is not None:
+            if self.plain:
+                raise ValueError(
+                    "RunSpec: plain mode has no failure schedule")
+            want = (self.rounds, self.elastic.num_workers)
+            if self.schedule.fail.shape != want:
+                raise ValueError(
+                    f"RunSpec.schedule shape {self.schedule.fail.shape} != "
+                    f"(rounds, num_workers) = {want}")
+
+    def replace(self, **kw) -> "RunSpec":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRecord:
+    """One communication round, materialized on the host.
+
+    ``u``/``score``/``h1``/``h2`` are the (k,) dynamic-weighting diagnostics
+    (zeros in plain mode); ``fail``/``straggle``/``restart`` echo the
+    schedule row that drove the round. ``eval_loss``/``eval_acc`` are the
+    master's held-out metrics, populated only on eval rounds (``eval_acc``
+    only for model families that define ``accuracy``).
+    """
+
+    round: int
+    loss: float
+    u: np.ndarray
+    score: np.ndarray
+    h1: np.ndarray
+    h2: np.ndarray
+    fail: np.ndarray
+    straggle: np.ndarray
+    restart: np.ndarray
+    eval_loss: Optional[float] = None
+    eval_acc: Optional[float] = None
+
+
+class ElasticSession:
+    """Stateful driver for one run: trainer state + schedule + batcher + eval.
+
+    ``run_iter()`` yields :class:`RoundRecord` s as rounds complete;
+    ``run()`` collects them. Execution advances in chunks of up to
+    ``spec.rounds_per_call`` rounds per jit call (``round_chunk``); chunk
+    boundaries are shortened to land exactly on eval rounds, so the eval
+    cadence is independent of the chunking. When the full ``spec.rounds``
+    have run and ``spec.save_path`` is set, the master checkpoint is saved
+    automatically with ``{"rounds", "arch", "scenario"}`` metadata.
+    """
+
+    def __init__(self, spec: RunSpec):
+        self.spec = spec
+        cfg = spec.model_cfg or get_config(spec.arch, smoke=spec.smoke)
+        self.model_cfg = cfg
+        self.model = build_model(cfg)
+        ecfg = spec.elastic
+        if spec.plain:
+            ecfg = dataclasses.replace(ecfg, num_workers=1, tau=1,
+                                       overlap_ratio=0.0, failure_prob=0.0)
+        self.ecfg = ecfg
+        self.trainer = ElasticTrainer(self.model, spec.optimizer, ecfg,
+                                      use_pallas=spec.use_pallas)
+        # -- data -----------------------------------------------------------
+        if cfg.family == "cnn":
+            ds = SyntheticImages(n=spec.n_data, n_test=spec.n_test,
+                                 seed=spec.data_seed)
+            self.batcher = WorkerBatcher(ds.images, ds.labels, ecfg,
+                                         batch_size=spec.batch_size,
+                                         seed=spec.seed)
+            self._test = {k: jnp.asarray(v) for k, v in
+                          ds.test_batch().items()}
+        else:
+            toks = SyntheticTokens(vocab=cfg.vocab_size,
+                                   n_tokens=spec.n_tokens,
+                                   seed=spec.data_seed)
+            self.batcher = TokenWorkerBatcher(toks.tokens, ecfg,
+                                              batch_size=spec.batch_size,
+                                              seq_len=spec.seq_len,
+                                              seed=spec.seed)
+            # held-out eval batch from the same stream, disjoint rng
+            self._test = {k: jnp.asarray(v) for k, v in toks.batch(
+                np.random.default_rng(spec.seed + 31), spec.batch_size,
+                spec.seq_len).items()}
+        # -- schedule -------------------------------------------------------
+        if spec.plain:
+            self.schedule = None
+            self._failed_recent = None
+        else:
+            if spec.schedule is not None:
+                self.schedule = spec.schedule
+            else:
+                sseed = (spec.scenario_seed if spec.scenario_seed is not None
+                         else spec.seed + 7)
+                self.schedule = make_scenario(ecfg).schedule(
+                    sseed, spec.rounds, ecfg.num_workers)
+            self._failed_recent = self.schedule.failed_recent_all()
+        # -- state ----------------------------------------------------------
+        if spec.plain:
+            self.state = init_train_state(self.model, spec.optimizer,
+                                          jax.random.key(spec.seed))
+            step = make_train_step(self.model, spec.optimizer)
+            self._plain_chunk = jax.jit(
+                lambda st, xs: jax.lax.scan(
+                    lambda s, x: step(s, x[0], x[1]), st, xs))
+        else:
+            self.state = self.trainer.init_state(jax.random.key(spec.seed))
+        self._rng_base = jax.random.key(spec.seed)
+        self._eval_loss = jax.jit(lambda p, b: self.model.loss(p, b)[0])
+        self._eval_acc = (jax.jit(self.model.accuracy)
+                          if hasattr(self.model, "accuracy") else None)
+        self.round = 0  # rounds completed so far
+
+    # -- eval ---------------------------------------------------------------
+    @property
+    def master_params(self):
+        """The authoritative parameters: the elastic master, or the single
+        worker's params in plain mode."""
+        return (self.state["params"] if self.spec.plain
+                else self.state["master"])
+
+    def evaluate(self):
+        """(held-out loss, accuracy-or-None) of the master params."""
+        loss = float(self._eval_loss(self.master_params, self._test))
+        acc = (float(self._eval_acc(self.master_params, self._test))
+               if self._eval_acc is not None else None)
+        return loss, acc
+
+    def _is_eval_round(self, r: int) -> bool:
+        e = self.spec.eval_every
+        return e > 0 and (r % e == 0 or r == self.spec.rounds - 1)
+
+    # -- checkpoint ---------------------------------------------------------
+    def save(self, path: Optional[str] = None,
+             extra_metadata: Optional[dict] = None) -> str:
+        """Save the master params with unified metadata. Every session
+        checkpoint — plain or elastic, any entrypoint — records at least
+        ``{"rounds", "arch", "scenario"}``."""
+        path = path or self.spec.save_path
+        if not path:
+            raise ValueError("no save path: pass one or set RunSpec.save_path")
+        meta = {"rounds": self.round, "arch": self.model_cfg.name,
+                "scenario": ("none" if self.spec.plain
+                             else self.ecfg.failure_scenario)}
+        meta.update(extra_metadata or {})
+        checkpoint.save(path, self.master_params, metadata=meta)
+        return path
+
+    # -- execution ----------------------------------------------------------
+    def _round_rng(self, r: int) -> jax.Array:
+        return jax.random.fold_in(self._rng_base, r)
+
+    def _next_chunk(self, end: int) -> int:
+        """Rounds to run in the next jit call: at most ``rounds_per_call``,
+        never past ``end``, and never past the next eval round (evals read
+        the master between chunks, so eval rounds must close a chunk)."""
+        n = min(self.spec.rounds_per_call, end - self.round)
+        if self.spec.eval_every > 0:
+            for r in range(self.round, self.round + n):
+                if self._is_eval_round(r):
+                    n = r - self.round + 1
+                    break
+        return n
+
+    def _stack_batches(self, n: int):
+        rounds = [self.batcher.round_batches() for _ in range(n)]
+        return {key: np.stack([b[key] for b in rounds])
+                for key in rounds[0]}
+
+    def _run_chunk_elastic(self, n: int) -> List[RoundRecord]:
+        lo, hi = self.round, self.round + n
+        sched = self.schedule
+        stacked = self._stack_batches(n)
+        rngs = [self._round_rng(r) for r in range(lo, hi)]
+        # specialization on whole-schedule has_* keeps one trace per run
+        # even when an individual chunk happens to be event-free
+        straggle = sched.straggle[lo:hi] if sched.has_stragglers else None
+        restart = sched.restart[lo:hi] if sched.has_restarts else None
+        if n == 1:
+            inputs = RoundInputs(
+                batches={k: jnp.asarray(v[0]) for k, v in stacked.items()},
+                rng=rngs[0],
+                fail=jnp.asarray(sched.fail[lo]),
+                failed_recent=jnp.asarray(self._failed_recent[lo]),
+                straggle=None if straggle is None
+                else jnp.asarray(straggle[0]),
+                restart=None if restart is None else jnp.asarray(restart[0]))
+            self.state, m = self.trainer.round_step(self.state, inputs)
+            m = jax.tree.map(lambda x: np.asarray(x)[None], m)
+        else:
+            inputs = RoundInputs(
+                batches={k: jnp.asarray(v) for k, v in stacked.items()},
+                rng=jnp.stack(rngs),
+                fail=jnp.asarray(sched.fail[lo:hi]),
+                failed_recent=jnp.asarray(self._failed_recent[lo:hi]),
+                straggle=None if straggle is None else jnp.asarray(straggle),
+                restart=None if restart is None else jnp.asarray(restart))
+            self.state, m = self.trainer.round_chunk(self.state, inputs)
+            m = jax.tree.map(np.asarray, m)
+        self.round = hi
+        records = []
+        for i, r in enumerate(range(lo, hi)):
+            ev_loss = ev_acc = None
+            if r == hi - 1 and self._is_eval_round(r):
+                ev_loss, ev_acc = self.evaluate()
+            records.append(RoundRecord(
+                round=r, loss=float(m["loss"][i]),
+                u=m["u"][i], score=m["score"][i],
+                h1=m["h1"][i], h2=m["h2"][i],
+                fail=sched.fail[r], straggle=sched.straggle[r],
+                restart=sched.restart[r],
+                eval_loss=ev_loss, eval_acc=ev_acc))
+        return records
+
+    def _run_chunk_plain(self, n: int) -> List[RoundRecord]:
+        lo, hi = self.round, self.round + n
+        stacked = self._stack_batches(n)
+        # WorkerBatcher emits (τ=1, k=1, B, ...); drop the unit axes
+        xs = ({k: jnp.asarray(v[:, 0, 0]) for k, v in stacked.items()},
+              jnp.stack([self._round_rng(r) for r in range(lo, hi)]))
+        self.state, m = self._plain_chunk(self.state, xs)
+        loss = np.asarray(m["loss"])
+        self.round = hi
+        z = np.zeros(1, np.float32)
+        zb = np.zeros(1, bool)
+        records = []
+        for i, r in enumerate(range(lo, hi)):
+            ev_loss = ev_acc = None
+            if r == hi - 1 and self._is_eval_round(r):
+                ev_loss, ev_acc = self.evaluate()
+            records.append(RoundRecord(
+                round=r, loss=float(loss[i]), u=z, score=z, h1=z, h2=z,
+                fail=zb, straggle=zb, restart=zb,
+                eval_loss=ev_loss, eval_acc=ev_acc))
+        return records
+
+    def run_iter(self, rounds: Optional[int] = None
+                 ) -> Iterator[RoundRecord]:
+        """Advance up to ``rounds`` rounds (default: the rest of the run),
+        yielding a :class:`RoundRecord` per round as each chunk lands."""
+        remaining = (self.spec.rounds - self.round if rounds is None
+                     else rounds)
+        end = self.round + remaining
+        if end > self.spec.rounds:
+            raise ValueError(
+                f"run would exceed RunSpec.rounds = {self.spec.rounds} "
+                f"(at round {self.round}, asked for {rounds} more)")
+        run_chunk = (self._run_chunk_plain if self.spec.plain
+                     else self._run_chunk_elastic)
+        while self.round < end:
+            yield from run_chunk(self._next_chunk(end))
+        if self.round >= self.spec.rounds and self.spec.save_path:
+            self.save()
+
+    def run(self, rounds: Optional[int] = None) -> List[RoundRecord]:
+        return list(self.run_iter(rounds))

@@ -1,6 +1,14 @@
 """Asynchronous elastic-averaging coordinator (the paper's system, §V–§VI).
 
-One ``round_step`` =
+Round inputs travel as one :class:`RoundInputs` pytree (batches, rng, fail,
+failed_recent, straggle, restart) instead of a growing positional signature;
+``round_step`` runs one round per jit call and ``round_chunk`` runs R rounds
+inside a single jit via ``lax.scan`` (inputs carry a leading (R,) axis), so
+per-round Python/dispatch overhead is paid once per chunk. The driver that
+builds the inputs — batcher, schedule, eval cadence — is
+``repro.api.session.ElasticSession``.
+
+One round =
 
   1. **local phase** — every worker runs τ local optimizer steps on its own
      (overlap-sharded) data: ``vmap`` over the worker axis, ``scan`` over τ.
@@ -40,6 +48,35 @@ from repro.optim.hutchinson import hessian_diag
 def tree_stack_copies(tree, k: int):
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (k,) + x.shape).copy(),
                         tree)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RoundInputs:
+    """Everything one simulated round consumes, as a single pytree.
+
+    Leaves are per-round (``round_step``) or carry a leading (R,) rounds
+    axis (``round_chunk``, which scans over that axis). ``straggle`` and
+    ``restart`` stay ``None`` when a scenario never fires them — ``None``
+    is an empty subtree, so the jitted round specializes those branches
+    away entirely (single trace, no mask traffic). Keep the None-ness
+    consistent across calls to avoid retraces.
+
+    - ``batches``: pytree with (τ, k, ...) leaves (or (R, τ, k, ...))
+    - ``rng``: per-round PRNG key (or a stacked (R,) key array)
+    - ``fail``: (k,) bool — communication suppressed this round
+    - ``failed_recent``: (k,) bool — oracle feed, see
+      ``ScenarioSchedule.failed_recent``
+    - ``straggle``: optional (k,) bool — reduced-τ slow workers
+    - ``restart``: optional (k,) bool — crash-rejoin resets
+    """
+
+    batches: Any
+    rng: jax.Array
+    fail: jax.Array
+    failed_recent: jax.Array
+    straggle: Optional[jax.Array] = None
+    restart: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass(eq=False)  # hash by id → usable as a static jit arg
@@ -247,19 +284,34 @@ class ElasticTrainer:
                     round=state["round"] + 1), metrics
 
     # -- full round ---------------------------------------------------------------
-    @functools.partial(jax.jit, static_argnums=0)
-    def round_step(self, state, batches, rng, fail_mask, failed_recent,
-                   straggle=None, restart=None):
+    def _round(self, state, inputs: RoundInputs):
         """One simulated round under a failure scenario: optional crash
         rejoins, the local phase (with per-worker straggler slowdown), then
         the communication phase under the fail mask."""
-        if restart is not None:
-            state = self.apply_restarts(state, restart)
-        state, loss = self.local_phase(state, batches, rng, straggle)
-        state, metrics = self.comm_phase(state, fail_mask, failed_recent,
-                                         straggle)
+        if inputs.restart is not None:
+            state = self.apply_restarts(state, inputs.restart)
+        state, loss = self.local_phase(state, inputs.batches, inputs.rng,
+                                       inputs.straggle)
+        state, metrics = self.comm_phase(state, inputs.fail,
+                                         inputs.failed_recent,
+                                         inputs.straggle)
         metrics["loss"] = loss
         return state, metrics
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def round_step(self, state, inputs: RoundInputs):
+        """One round per jit call; ``inputs`` leaves are per-round."""
+        return self._round(state, inputs)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def round_chunk(self, state, inputs: RoundInputs):
+        """R rounds in one jit call: every ``inputs`` leaf carries a leading
+        (R,) axis and ``lax.scan`` threads the state through the rounds, so
+        the Python/dispatch cost of a round is paid once per chunk. The
+        scanned body is exactly ``round_step``'s, so a chunked run is
+        bit-identical to R separate ``round_step`` calls; metrics come back
+        stacked with a leading (R,) axis."""
+        return jax.lax.scan(self._round, state, inputs)
 
     # -- eval ----------------------------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)

@@ -10,9 +10,9 @@ dynamic weighting, so each gets its own generator here.
 
 A :class:`FailureScenario` emits a :class:`ScenarioSchedule` — three
 ``(rounds, k)`` bool masks precomputed host-side with numpy (deterministic
-given the seed). Per-round rows are handed to the jitted
-``ElasticTrainer.round_step`` as plain arrays, so every scenario is
-jit-compatible by construction:
+given the seed). ``ElasticSession`` slices rows (or whole ``(R, k)``
+blocks for jit-chunked execution) into the coordinator's ``RoundInputs``,
+so every scenario is jit-compatible by construction:
 
 ``fail``
     communication with the master suppressed this round (the worker keeps
@@ -56,8 +56,9 @@ from repro.core.failure import failure_schedule_np
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioSchedule:
-    """Precomputed (rounds, k) bool masks; index a row per round and wrap it
-    in ``jnp.asarray`` to feed the jitted ``round_step``."""
+    """Precomputed (rounds, k) bool masks; ``ElasticSession`` feeds rows
+    (per-round) or contiguous blocks (``round_chunk``) into
+    ``RoundInputs``."""
 
     fail: np.ndarray
     straggle: np.ndarray
@@ -83,14 +84,36 @@ class ScenarioSchedule:
     def has_restarts(self) -> bool:
         return bool(self.restart.any())
 
-    def failed_recent(self, r: int, window: int) -> np.ndarray:
-        """(k,) bool — failed in any of the last ``window`` rounds ≤ r
-        (rounds r−window+1..r, matching ``repro.core.failure.failed_recently``).
+    def failed_recent(self, r: int) -> np.ndarray:
+        """(k,) bool — the worker's sync was suppressed in the *previous*
+        round (r−1; all-False at r=0).
 
-        Feed for the oracle baseline (EAHES-OM), which is allowed to read
-        the schedule directly.
+        This is the canonical definition of "failed recently", the feed for
+        the oracle baseline EAHES-OM which is allowed to read the schedule
+        directly. Paper §VI frames the oracle as acting "as if we know when
+        a node will fail": it snaps a worker back (h1=1) and shields the
+        master (h2=0) on exactly the first successful sync after a missed
+        one, then immediately restores normal α. Before ISSUE-3 two
+        readings coexisted — launch/train.py used failed-within-
+        ``score_window`` while paper_repro.py used previous-round-only; the
+        window reading keeps suppressing up to ``score_window−1`` healthy
+        syncs after a worker has already re-synced, which over-protects the
+        master and is not what §VI describes. Previous-round-only is now
+        the single definition, and every entrypoint receives it through
+        ``ElasticSession``.
         """
-        return self.fail[max(0, r - window + 1):r + 1].any(axis=0)
+        if r == 0:
+            return np.zeros(self.num_workers, bool)
+        return self.fail[r - 1]
+
+    def failed_recent_all(self) -> np.ndarray:
+        """(rounds, k) bool — ``failed_recent`` for every round (row r is
+        ``fail[r−1]``, row 0 all-False). Precomputed form consumed by
+        ``ElasticSession`` so chunked execution can slice (R, k) blocks
+        straight into ``round_chunk``."""
+        out = np.zeros_like(self.fail)
+        out[1:] = self.fail[:-1]
+        return out
 
 
 def _zeros(rounds: int, k: int) -> np.ndarray:

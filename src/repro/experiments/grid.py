@@ -22,10 +22,12 @@ import time
 RESULTS = "results/paper_repro"
 
 
-def job_cmd(method, k, tau, seed, rounds, out, overlap=None, scenario=None):
+def job_cmd(method, k, tau, seed, rounds, out, overlap=None, scenario=None,
+            rounds_per_call=1):
     cmd = [sys.executable, "-m", "repro.experiments.paper_repro",
            "--method", method, "--k", str(k), "--tau", str(tau),
-           "--seed", str(seed), "--rounds", str(rounds), "--out", out]
+           "--seed", str(seed), "--rounds", str(rounds), "--out", out,
+           "--rounds-per-call", str(rounds_per_call)]
     if overlap is not None:
         cmd += ["--overlap-ratio", str(overlap)]
     if scenario is not None:
@@ -72,7 +74,7 @@ ROUNDS_BY_TAU = {1: 16, 2: 12, 4: 8}
 
 
 def grid_jobs(rounds=None, seeds=(0,), methods=None, ks=(4, 8),
-              taus=(1, 2, 4)):
+              taus=(1, 2, 4), rounds_per_call=1):
     from repro.experiments.paper_repro import METHODS
 
     methods = methods or sorted(METHODS)
@@ -85,12 +87,14 @@ def grid_jobs(rounds=None, seeds=(0,), methods=None, ks=(4, 8),
         if os.path.exists(out):
             continue
         jobs.append((f"{m} k={k} τ={tau} s={s}",
-                     job_cmd(m, k, tau, s, r, out)))
+                     job_cmd(m, k, tau, s, r, out,
+                             rounds_per_call=rounds_per_call)))
     return jobs
 
 
 def scenario_jobs(rounds=12, seeds=(0,), scenarios=None,
-                  methods=("EASGD", "EAHES-O", "DEAHES-O"), k=4, tau=1):
+                  methods=("EASGD", "EAHES-O", "DEAHES-O"), k=4, tau=1,
+                  rounds_per_call=1):
     """Failure-regime axis: every scenario from the engine × the headline
     methods, at the paper's k=4/τ=1 operating point."""
     from repro.configs.base import FAILURE_SCENARIOS
@@ -102,18 +106,21 @@ def scenario_jobs(rounds=12, seeds=(0,), scenarios=None,
         if os.path.exists(out):
             continue
         jobs.append((f"{m} scen={sc} s={s}",
-                     job_cmd(m, k, tau, s, rounds, out, scenario=sc)))
+                     job_cmd(m, k, tau, s, rounds, out, scenario=sc,
+                             rounds_per_call=rounds_per_call)))
     return jobs
 
 
-def overlap_jobs(rounds=16, seeds=(0,), ratios=(0.0, 0.125, 0.25, 0.375, 0.5)):
+def overlap_jobs(rounds=16, seeds=(0,), ratios=(0.0, 0.125, 0.25, 0.375, 0.5),
+                 rounds_per_call=1):
     jobs = []
     for r, s in itertools.product(ratios, seeds):
         out = f"{RESULTS}/fig3_r{r}_s{s}.json"
         if os.path.exists(out):
             continue
         jobs.append((f"overlap r={r} s={s}",
-                     job_cmd("EAHES-O", 4, 1, s, rounds, out, overlap=r)))
+                     job_cmd("EAHES-O", 4, 1, s, rounds, out, overlap=r,
+                             rounds_per_call=rounds_per_call)))
     return jobs
 
 
@@ -131,19 +138,23 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=None,
                     help="override the per-τ round budget")
+    ap.add_argument("--rounds-per-call", type=int, default=1,
+                    help="jit-scan chunk size passed to every job (the "
+                         "session API guarantees numbers are unchanged)")
     ap.add_argument("--seeds", type=int, default=1)
     ap.add_argument("--max-procs", type=int, default=1)
     ap.add_argument("--what", default="all",
                     choices=["all", "fig45", "fig3", "scenarios"])
     args = ap.parse_args()
     seeds = tuple(range(args.seeds))
+    rpc = args.rounds_per_call
     jobs = []
     if args.what in ("all", "fig45"):
-        jobs += grid_jobs(args.rounds, seeds)
+        jobs += grid_jobs(args.rounds, seeds, rounds_per_call=rpc)
     if args.what in ("all", "fig3"):
-        jobs += overlap_jobs(args.rounds or 16, seeds)
+        jobs += overlap_jobs(args.rounds or 16, seeds, rounds_per_call=rpc)
     if args.what in ("all", "scenarios"):
-        jobs += scenario_jobs(args.rounds or 12, seeds)
+        jobs += scenario_jobs(args.rounds or 12, seeds, rounds_per_call=rpc)
     print(f"{len(jobs)} jobs")
     failed = run_pool(jobs, args.max_procs)
     if failed:

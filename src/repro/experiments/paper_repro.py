@@ -14,26 +14,24 @@ default; ``--failure-scenario`` swaps in any regime from the scenario engine
 Dataset: synthetic MNIST proxy (MNIST unavailable offline — see DESIGN.md),
 model: the paper's 2-conv CNN. Metrics per communication round: master
 train-loss and master test-accuracy, written as JSON.
+
+The run itself is one ``ElasticSession`` (``repro.api``); this module only
+maps method names onto configs and collects eval-round records into the
+figure curves. ``--rounds-per-call`` chunks execution without changing any
+number.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import time
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ElasticSession, RunSpec
 from repro.configs.base import (FAILURE_SCENARIOS, ElasticConfig,
-                                OptimizerConfig, get_config)
-from repro.core.coordinator import ElasticTrainer
-from repro.core.scenarios import make_scenario
-from repro.data.pipeline import WorkerBatcher
-from repro.data.synthetic import SyntheticImages
-from repro.models.registry import build_model
+                                OptimizerConfig)
 
 METHODS = {
     # name: (optimizer, dynamic, oracle, use_overlap)
@@ -69,6 +67,7 @@ def run_one(
     out_path: Optional[str] = None,
     score_k: float = -0.05,
     failure_scenario: str = "iid",
+    rounds_per_call: int = 1,
 ):
     opt_name, dynamic, oracle, use_overlap = METHODS[method]
     r = (overlap_ratio if overlap_ratio is not None
@@ -79,44 +78,27 @@ def run_one(
         score_k=score_k, failure_scenario=failure_scenario)
     ocfg = OptimizerConfig(name=opt_name, lr=LR, momentum=0.5,
                            betas=(0.9, 0.999), hutchinson_samples=1)
-
-    model = build_model(get_config("paper_cnn"))
-    trainer = ElasticTrainer(model, ocfg, ecfg)
-    state = trainer.init_state(jax.random.key(seed))
-
-    ds = SyntheticImages(n=n_data, n_test=n_test, seed=0)  # same data ∀ runs
-    wb = WorkerBatcher(ds.images, ds.labels, ecfg, batch_size=batch_size,
-                       seed=seed)
-    sched = make_scenario(ecfg).schedule(seed + 7, rounds, k)
-    test = {key: jnp.asarray(val) for key, val in ds.test_batch().items()}
+    # data_seed=0: same dataset ∀ (method, seed) runs, as §VI compares;
+    # the oracle's failed_recent feed is the canonical previous-round
+    # definition (ScenarioSchedule.failed_recent) via the session.
+    spec = RunSpec(
+        arch="paper-cnn", optimizer=ocfg, elastic=ecfg, rounds=rounds,
+        rounds_per_call=rounds_per_call, seed=seed, batch_size=batch_size,
+        n_data=n_data, n_test=n_test, data_seed=0, eval_every=eval_every)
+    sess = ElasticSession(spec)
 
     curves = {"round": [], "train_loss": [], "test_loss": [], "test_acc": [],
               "score": [], "h2": []}
     t0 = time.time()
-    for rd in range(rounds):
-        batches = {key: jnp.asarray(val)
-                   for key, val in wb.round_batches().items()}
-        fail = jnp.asarray(sched.fail[rd])
-        # oracle (EAHES-OM): snap-back exactly on the first successful sync
-        # after a missed one — "as if we know when a node will fail" (§VI)
-        recent = jnp.asarray(sched.fail[rd - 1] if rd > 0
-                             else np.zeros(k, bool))
-        straggle = (jnp.asarray(sched.straggle[rd])
-                    if sched.has_stragglers else None)
-        restart = (jnp.asarray(sched.restart[rd])
-                   if sched.has_restarts else None)
-        state, m = trainer.round_step(
-            state, batches, jax.random.key(seed * 1000 + rd), fail, recent,
-            straggle, restart)
-        if rd % eval_every == 0 or rd == rounds - 1:
-            acc = float(trainer.master_accuracy(state, test))
-            tl = float(trainer.master_loss(state, test))
-            curves["round"].append(rd)
-            curves["train_loss"].append(float(m["loss"]))
-            curves["test_loss"].append(tl)
-            curves["test_acc"].append(acc)
-            curves["score"].append(np.asarray(m["score"]).tolist())
-            curves["h2"].append(np.asarray(m["h2"]).tolist())
+    for rec in sess.run_iter():
+        if rec.eval_loss is None:
+            continue
+        curves["round"].append(rec.round)
+        curves["train_loss"].append(rec.loss)
+        curves["test_loss"].append(rec.eval_loss)
+        curves["test_acc"].append(rec.eval_acc)
+        curves["score"].append(np.asarray(rec.score).tolist())
+        curves["h2"].append(np.asarray(rec.h2).tolist())
 
     result = {
         "method": method, "k": k, "tau": tau, "seed": seed,
@@ -142,6 +124,7 @@ def main():
     ap.add_argument("--tau", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--rounds-per-call", type=int, default=1)
     ap.add_argument("--overlap-ratio", type=float, default=None)
     ap.add_argument("--failure-scenario", default="iid",
                     choices=FAILURE_SCENARIOS)
@@ -149,7 +132,8 @@ def main():
     args = ap.parse_args()
     res = run_one(args.method, args.k, args.tau, args.seed,
                   rounds=args.rounds, overlap_ratio=args.overlap_ratio,
-                  out_path=args.out, failure_scenario=args.failure_scenario)
+                  out_path=args.out, failure_scenario=args.failure_scenario,
+                  rounds_per_call=args.rounds_per_call)
     print(json.dumps({k: v for k, v in res.items() if k != "curves"}))
 
 

@@ -20,7 +20,7 @@ from repro.analysis.hlo import collective_bytes  # noqa: E402
 from repro.configs.base import (INPUT_SHAPES, OptimizerConfig,  # noqa: E402
                                 get_config, list_archs, normalize_arch,
                                 shape_supported)
-from repro.core.coordinator import ElasticTrainer  # noqa: E402
+from repro.core.coordinator import ElasticTrainer, RoundInputs  # noqa: E402
 from repro.configs.base import ElasticConfig  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models.registry import build_model  # noqa: E402
@@ -79,6 +79,8 @@ def _abstract_inputs(model, shape, mesh, rules=None):
 def _analyse(lowered, compiled, mesh, elapsed):
     n_dev = mesh.devices.size
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # older jax returns [dict] per device
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_d = {
@@ -177,14 +179,17 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
         mask = jax.ShapeDtypeStruct((k,), jnp.bool_)
         rep = NamedSharding(mesh, P())
-        fn = lambda s, b, r, f, fr: trainer.round_step.__wrapped__(
-            trainer, s, b, r, f, fr)
+        inputs = RoundInputs(batches=batches, rng=rng, fail=mask,
+                             failed_recent=mask)
+        inputs_sh = RoundInputs(batches=batch_sh, rng=rep, fail=rep,
+                                failed_recent=rep)
+        fn = lambda s, i: trainer.round_step.__wrapped__(trainer, s, i)
         jitted = jax.jit(
             fn,
-            in_shardings=(state_sh, batch_sh, rep, rep, rep),
+            in_shardings=(state_sh, inputs_sh),
             donate_argnums=(0,))
         with mesh:
-            lowered = jitted.lower(state, batches, rng, mask, mask)
+            lowered = jitted.lower(state, inputs)
             compiled = lowered.compile()
         out = _analyse(lowered, compiled, mesh, time.time() - t0)
         out["lowered_kind"] = "elastic_round_step"

@@ -1,4 +1,4 @@
-"""Training launcher.
+"""Training launcher — a thin argv shim over ``repro.api.ElasticSession``.
 
 Two modes:
 - ``--elastic``: the paper's system — k workers, τ-periodic dynamic-weight
@@ -8,27 +8,21 @@ Two modes:
 
 On real hardware this runs under the production mesh; on CPU it runs the
 same code on the host mesh. ``--arch`` takes any assigned architecture id
-(smoke variant with ``--smoke``) or ``paper-cnn``.
+(smoke variant with ``--smoke``) or ``paper-cnn``. ``--rounds-per-call R``
+executes R rounds per jit call (``ElasticTrainer.round_chunk``) —
+bit-identical to per-round execution, but the per-round driver overhead is
+paid once per chunk.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import checkpoint
+from repro.api import ElasticSession, RunSpec
 from repro.configs.base import (FAILURE_SCENARIOS, ElasticConfig,
-                                OptimizerConfig, ShapeConfig, get_config)
-from repro.core.coordinator import ElasticTrainer
-from repro.core.scenarios import make_scenario
-from repro.data.pipeline import TokenWorkerBatcher, WorkerBatcher
-from repro.data.synthetic import SyntheticImages, SyntheticTokens
-from repro.models.registry import build_model
-from repro.train.steps import init_train_state, make_train_step
+                                OptimizerConfig)
 
 
 def main(argv=None):
@@ -37,6 +31,9 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config of the arch family")
     ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--rounds-per-call", type=int, default=1,
+                    help="rounds executed inside one jit call (lax.scan "
+                         "chunking; 1 = per-round dispatch)")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--tau", type=int, default=1)
     ap.add_argument("--batch-size", type=int, default=32)
@@ -58,77 +55,44 @@ def main(argv=None):
     ap.add_argument("--elastic", action="store_true", default=True)
     ap.add_argument("--plain", dest="elastic", action="store_false")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-seed", type=int, default=0,
+                    help="synthetic dataset generation seed; fixed by "
+                         "default so --seed sweeps vary only init/batching/"
+                         "schedule on identical data (the §VI convention)")
     ap.add_argument("--save", default=None)
     args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch, smoke=args.smoke)
-    model = build_model(cfg)
-    ocfg = OptimizerConfig(name=args.optimizer, lr=args.lr)
-
-    if cfg.family == "cnn":
-        ds = SyntheticImages(n=8000, n_test=1000)
-        make_batcher = lambda ecfg: WorkerBatcher(
-            ds.images, ds.labels, ecfg, batch_size=args.batch_size,
-            seed=args.seed)
-    else:
-        toks = SyntheticTokens(vocab=cfg.vocab_size, n_tokens=100_000,
-                               seed=args.seed)
-        ds = None
-        make_batcher = lambda ecfg: TokenWorkerBatcher(
-            toks.tokens, ecfg, batch_size=args.batch_size,
-            seq_len=args.seq_len, seed=args.seed)
-
-    if not args.elastic:
-        state = init_train_state(model, ocfg, jax.random.key(args.seed))
-        step = jax.jit(make_train_step(model, ocfg))
-        ecfg = ElasticConfig(num_workers=1, tau=1, overlap_ratio=0.0,
-                             failure_prob=0.0)
-        wb = make_batcher(ecfg)
-        for r in range(args.rounds):
-            b = {k: jnp.asarray(v[0, 0]) for k, v in
-                 wb.round_batches().items()}
-            state, m = step(state, b, jax.random.key(r))
-            print(f"step {r}: loss={float(m['loss']):.4f}", flush=True)
-        if args.save:
-            checkpoint.save(args.save, state["params"])
-        return
 
     ecfg = ElasticConfig(
         num_workers=args.workers, tau=args.tau, alpha=args.alpha,
         overlap_ratio=args.overlap, failure_prob=args.failure_prob,
         dynamic=not args.no_dynamic, comm_mode=args.comm_mode,
         failure_scenario=args.failure_scenario)
-    trainer = ElasticTrainer(model, ocfg, ecfg)
-    state = trainer.init_state(jax.random.key(args.seed))
-    wb = make_batcher(ecfg)
-    sched = make_scenario(ecfg).schedule(args.seed + 7, args.rounds,
-                                         args.workers)
+    spec = RunSpec(
+        arch=args.arch, smoke=args.smoke,
+        optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr),
+        elastic=ecfg, rounds=args.rounds,
+        rounds_per_call=args.rounds_per_call, seed=args.seed,
+        plain=not args.elastic, batch_size=args.batch_size,
+        seq_len=args.seq_len, n_data=8000, n_test=1000,
+        data_seed=args.data_seed, save_path=args.save)
+    sess = ElasticSession(spec)
+
     t0 = time.time()
-    for r in range(args.rounds):
-        batches = {k: jnp.asarray(v) for k, v in wb.round_batches().items()}
-        fail = jnp.asarray(sched.fail[r])
-        recent = jnp.asarray(sched.failed_recent(r, ecfg.score_window))
-        # keep the None fast path (single trace) when a mask never fires
-        straggle = (jnp.asarray(sched.straggle[r])
-                    if sched.has_stragglers else None)
-        restart = (jnp.asarray(sched.restart[r])
-                   if sched.has_restarts else None)
-        state, m = trainer.round_step(
-            state, batches, jax.random.key(args.seed * 997 + r), fail,
-            recent, straggle, restart)
+    for rec in sess.run_iter():
+        if spec.plain:
+            print(f"step {rec.round}: loss={rec.loss:.4f}", flush=True)
+            continue
         extra = ""
-        if sched.has_stragglers:
-            extra += f" straggle={sched.straggle[r].astype(int).tolist()}"
-        if sched.has_restarts:
-            extra += f" restart={sched.restart[r].astype(int).tolist()}"
-        print(f"round {r}: loss={float(m['loss']):.4f} "
-              f"fails={sched.fail[r].astype(int).tolist()} "
-              f"score={np.asarray(m['score']).round(3).tolist()} "
-              f"h2={np.asarray(m['h2']).round(3).tolist()}{extra} "
+        if sess.schedule.has_stragglers:
+            extra += f" straggle={rec.straggle.astype(int).tolist()}"
+        if sess.schedule.has_restarts:
+            extra += f" restart={rec.restart.astype(int).tolist()}"
+        print(f"round {rec.round}: loss={rec.loss:.4f} "
+              f"fails={rec.fail.astype(int).tolist()} "
+              f"score={np.asarray(rec.score).round(3).tolist()} "
+              f"h2={np.asarray(rec.h2).round(3).tolist()}{extra} "
               f"({time.time()-t0:.1f}s)", flush=True)
     if args.save:
-        checkpoint.save(args.save, state["master"],
-                        metadata={"rounds": args.rounds})
         print(f"saved master params to {args.save}")
 
 

@@ -15,6 +15,17 @@ def test_train_cli_elastic_cnn(capsys):
 
 
 @pytest.mark.slow
+def test_train_cli_chunked_rounds_per_call(capsys):
+    """--rounds-per-call routes the CLI through round_chunk (one jit call
+    for all three rounds) and still prints per-round records."""
+    train_cli.main([
+        "--arch", "paper-cnn", "--rounds", "3", "--workers", "2",
+        "--batch-size", "8", "--rounds-per-call", "3"])
+    out = capsys.readouterr().out
+    assert "round 0" in out and "round 2" in out and "score=" in out
+
+
+@pytest.mark.slow
 def test_train_cli_plain_lm(capsys):
     train_cli.main([
         "--arch", "qwen3-4b", "--smoke", "--plain", "--rounds", "2",

@@ -18,7 +18,7 @@ from repro.configs.base import (FAILURE_SCENARIOS, ElasticConfig,
                                 OptimizerConfig, get_config)
 from repro.core import dynamic_weight as dw
 from repro.core import scenarios as sc
-from repro.core.coordinator import ElasticTrainer
+from repro.core.coordinator import ElasticTrainer, RoundInputs
 from repro.core.failure import (failed_recently, failure_schedule,
                                 failure_schedule_np)
 from repro.models.registry import build_model
@@ -192,20 +192,28 @@ def test_crash_restart_downtime_and_rejoin_invariants():
                 assert later[0] - s == 3
 
 
-def test_failed_recent_window_helper():
+def test_failed_recent_previous_round_semantics():
+    """Canonical oracle feed (ISSUE-3): failed_recent(r) is previous-round
+    fail only — the oracle snaps back on exactly the first successful sync
+    after a missed one (§VI), not for a whole score_window."""
     fail = np.zeros((6, 2), bool)
     fail[1, 0] = True
     sched = sc.ScenarioSchedule(fail, np.zeros_like(fail),
                                 np.zeros_like(fail))
-    assert sched.failed_recent(1, 2).tolist() == [True, False]
-    assert sched.failed_recent(2, 2).tolist() == [True, False]
-    assert sched.failed_recent(3, 2).tolist() == [False, False]
+    assert sched.failed_recent(0).tolist() == [False, False]
+    assert sched.failed_recent(1).tolist() == [False, False]
+    assert sched.failed_recent(2).tolist() == [True, False]
+    assert sched.failed_recent(3).tolist() == [False, False]
     assert sched.has_stragglers is False and sched.has_restarts is False
-    # same window semantics as the jax-side helper
+    # the stacked (rounds, k) feed rows equal the per-round rows, and match
+    # the window helper at window=1 (the previous-round special case)
+    all_rows = sched.failed_recent_all()
     for r in range(6):
-        np.testing.assert_array_equal(
-            sched.failed_recent(r, 2),
-            np.asarray(failed_recently(jnp.asarray(fail), r, 2)))
+        np.testing.assert_array_equal(all_rows[r], sched.failed_recent(r))
+        if r > 0:
+            np.testing.assert_array_equal(
+                sched.failed_recent(r),
+                np.asarray(failed_recently(jnp.asarray(fail), r - 1, 1)))
 
 
 # ---------------------------------------------------------------------------
@@ -368,12 +376,42 @@ def test_restart_triggers_recovery_weights():
 def test_round_step_accepts_scenario_masks():
     tr = _trainer(k=2, tau=2)
     state = tr.init_state(jax.random.key(0))
-    state, m = tr.round_step(
-        state, _img_batches(2, 2), jax.random.key(1),
-        jnp.asarray([False, True]), jnp.zeros(2, bool),
-        jnp.asarray([True, False]), jnp.asarray([False, True]))
+    state, m = tr.round_step(state, RoundInputs(
+        batches=_img_batches(2, 2), rng=jax.random.key(1),
+        fail=jnp.asarray([False, True]), failed_recent=jnp.zeros(2, bool),
+        straggle=jnp.asarray([True, False]),
+        restart=jnp.asarray([False, True])))
     assert bool(jnp.isfinite(m["loss"]))
     assert int(state["round"]) == 1
+
+
+def test_round_chunk_scans_stacked_inputs():
+    """round_chunk over stacked (R, ...) inputs is bit-identical to R
+    round_step calls (the jit-scanned multi-round core of ISSUE-3)."""
+    tr = _trainer(k=2, tau=2)
+    R = 3
+    rng = np.random.default_rng(0)
+    batches = {k: jnp.stack([v + i for i in range(R)])
+               for k, v in _img_batches(2, 2).items()}
+    fail = jnp.asarray(rng.random((R, 2)) < 0.5)
+    recent = jnp.zeros((R, 2), bool)
+    keys = jnp.stack([jax.random.key(r) for r in range(R)])
+    restart = jnp.asarray(rng.random((R, 2)) < 0.3)
+
+    state = tr.init_state(jax.random.key(0))
+    want = state
+    for r in range(R):
+        want, wm = tr.round_step(want, RoundInputs(
+            batches={k: v[r] for k, v in batches.items()}, rng=keys[r],
+            fail=fail[r], failed_recent=recent[r], restart=restart[r]))
+    got, gm = tr.round_chunk(state, RoundInputs(
+        batches=batches, rng=keys, fail=fail, failed_recent=recent,
+        restart=restart))
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert gm["loss"].shape == (R,) and gm["h2"].shape == (R, 2)
+    np.testing.assert_array_equal(np.asarray(wm["h2"]),
+                                  np.asarray(gm["h2"][-1]))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,219 @@
+"""Session API (ISSUE-3): RunSpec validation, legacy-loop equivalence.
+
+The acceptance surface: ``ElasticSession`` — both per-round
+(``rounds_per_call=1``) and jit-chunked (``rounds_per_call>1``) — must
+reproduce the legacy hand-rolled per-round loop's master params
+*bit-exactly*, across comm modes and failure scenarios; chunk boundaries
+must not disturb the eval cadence; and every session checkpoint carries the
+unified ``{"rounds", "arch", "scenario"}`` metadata.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ElasticSession, RoundRecord, RunSpec
+from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+from repro.core.coordinator import ElasticTrainer, RoundInputs
+from repro.core.scenarios import ScenarioSchedule, make_scenario
+from repro.data.pipeline import WorkerBatcher
+from repro.data.synthetic import SyntheticImages
+from repro.models.registry import build_model
+
+ROUNDS, K = 4, 2
+
+
+def _spec(comm_mode="sequential", scenario="iid", rpc=1, **kw):
+    ecfg = ElasticConfig(num_workers=K, tau=2, alpha=0.1, dynamic=True,
+                         failure_prob=0.4, comm_mode=comm_mode,
+                         failure_scenario=scenario)
+    defaults = dict(arch="paper-cnn",
+                    optimizer=OptimizerConfig(name="sgd", lr=0.01),
+                    elastic=ecfg, rounds=ROUNDS, rounds_per_call=rpc,
+                    seed=1, batch_size=4, n_data=96, n_test=32)
+    defaults.update(kw)
+    return RunSpec(**defaults)
+
+
+def _legacy_master(spec):
+    """The pre-ISSUE-3 hand-rolled per-round loop (launch/train.py shape),
+    replicating the session's data/schedule/rng conventions: one
+    ``round_step`` jit call per round, masks converted row by row."""
+    model = build_model(get_config(spec.arch))
+    trainer = ElasticTrainer(model, spec.optimizer, spec.elastic)
+    state = trainer.init_state(jax.random.key(spec.seed))
+    ds = SyntheticImages(n=spec.n_data, n_test=spec.n_test,
+                         seed=spec.data_seed)
+    wb = WorkerBatcher(ds.images, ds.labels, spec.elastic,
+                       batch_size=spec.batch_size, seed=spec.seed)
+    sched = make_scenario(spec.elastic).schedule(spec.seed + 7, spec.rounds,
+                                                 spec.elastic.num_workers)
+    base = jax.random.key(spec.seed)
+    for r in range(spec.rounds):
+        inputs = RoundInputs(
+            batches={k: jnp.asarray(v) for k, v in
+                     wb.round_batches().items()},
+            rng=jax.random.fold_in(base, r),
+            fail=jnp.asarray(sched.fail[r]),
+            failed_recent=jnp.asarray(sched.failed_recent(r)),
+            straggle=(jnp.asarray(sched.straggle[r])
+                      if sched.has_stragglers else None),
+            restart=(jnp.asarray(sched.restart[r])
+                     if sched.has_restarts else None))
+        state, m = trainer.round_step(state, inputs)
+    return state["master"]
+
+
+def _assert_trees_bit_exact(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# equivalence: session (per-round and chunked) == legacy loop, bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("comm_mode", ["sequential", "fused"])
+@pytest.mark.parametrize("scenario", ["iid", "crash_restart"])
+def test_session_bit_exact_vs_legacy_loop(comm_mode, scenario):
+    spec = _spec(comm_mode, scenario)
+    want = _legacy_master(spec)
+
+    per_round = ElasticSession(spec)
+    recs = per_round.run()
+    assert len(recs) == ROUNDS and per_round.round == ROUNDS
+    _assert_trees_bit_exact(per_round.master_params, want)
+
+    # rounds_per_call=3 over 4 rounds: one full chunk + a remainder chunk
+    chunked = ElasticSession(spec.replace(rounds_per_call=3))
+    crecs = chunked.run()
+    assert len(crecs) == ROUNDS
+    _assert_trees_bit_exact(chunked.master_params, want)
+
+    # per-round diagnostics also agree between chunkings
+    for a, b in zip(recs, crecs):
+        assert a.round == b.round
+        np.testing.assert_array_equal(a.h2, b.h2)
+        np.testing.assert_array_equal(np.float32(a.loss), np.float32(b.loss))
+
+
+def test_session_records_echo_schedule():
+    spec = _spec(scenario="crash_restart", rpc=2)
+    sess = ElasticSession(spec)
+    recs = sess.run()
+    for rec in recs:
+        assert isinstance(rec, RoundRecord)
+        np.testing.assert_array_equal(rec.fail, sess.schedule.fail[rec.round])
+        np.testing.assert_array_equal(rec.restart,
+                                      sess.schedule.restart[rec.round])
+        assert np.isfinite(rec.loss)
+    assert [r.round for r in recs] == list(range(ROUNDS))
+
+
+def test_chunked_eval_matches_per_round_eval():
+    """Chunk boundaries snap to eval rounds, so the eval cadence and values
+    are independent of rounds_per_call."""
+    a = ElasticSession(_spec(rpc=1, eval_every=2)).run()
+    b = ElasticSession(_spec(rpc=3, eval_every=2)).run()
+    evals_a = [(r.round, r.eval_loss, r.eval_acc) for r in a
+               if r.eval_loss is not None]
+    evals_b = [(r.round, r.eval_loss, r.eval_acc) for r in b
+               if r.eval_loss is not None]
+    assert [e[0] for e in evals_a] == [0, 2, 3]
+    assert evals_a == evals_b
+
+
+def test_run_iter_partial_then_resume():
+    spec = _spec(rpc=2)
+    sess = ElasticSession(spec)
+    first = sess.run(1)
+    assert len(first) == 1 and sess.round == 1
+    rest = sess.run()
+    assert [r.round for r in rest] == [1, 2, 3]
+    with pytest.raises(ValueError):
+        sess.run(1)  # past RunSpec.rounds
+
+    # a split run lands on the same params as an uninterrupted one
+    full = ElasticSession(spec)
+    want = full.run()
+    _assert_trees_bit_exact(sess.master_params, full.master_params)
+    np.testing.assert_array_equal(np.float32(rest[-1].loss),
+                                  np.float32(want[-1].loss))
+
+
+# ---------------------------------------------------------------------------
+# RunSpec validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(rounds=0),
+    dict(rounds_per_call=0),
+    dict(batch_size=0),
+    dict(eval_every=-1),
+    dict(n_data=0),
+])
+def test_runspec_rejects_bad_values(kw):
+    with pytest.raises(ValueError):
+        _spec(**kw)
+
+
+def test_runspec_rejects_mismatched_schedule():
+    z = np.zeros((ROUNDS + 1, K), bool)
+    with pytest.raises(ValueError, match="schedule shape"):
+        _spec(schedule=ScenarioSchedule(z, z, z))
+
+
+def test_runspec_rejects_schedule_in_plain_mode():
+    z = np.zeros((ROUNDS, K), bool)
+    with pytest.raises(ValueError, match="plain"):
+        _spec(plain=True, schedule=ScenarioSchedule(z, z, z))
+
+
+def test_runspec_rejects_bad_elastic_config():
+    with pytest.raises(ValueError):
+        _spec(elastic=ElasticConfig(comm_mode="nope"))
+
+
+# ---------------------------------------------------------------------------
+# custom schedules, plain mode, checkpoints
+# ---------------------------------------------------------------------------
+
+def test_session_accepts_custom_schedule():
+    fail = np.zeros((ROUNDS, K), bool)
+    fail[1:3, 0] = True
+    z = np.zeros_like(fail)
+    sess = ElasticSession(_spec(schedule=ScenarioSchedule(fail, z, z)))
+    recs = sess.run()
+    assert [tuple(r.fail) for r in recs] == [tuple(row) for row in fail]
+    # previous-round-only oracle feed, from the injected schedule
+    np.testing.assert_array_equal(sess.schedule.failed_recent(2), fail[1])
+
+
+def test_plain_mode_runs_and_saves_params(tmp_path):
+    path = str(tmp_path / "ck")
+    spec = _spec(plain=True, rpc=2, save_path=path, rounds=3)
+    sess = ElasticSession(spec)
+    recs = sess.run()
+    assert len(recs) == 3 and all(np.isfinite(r.loss) for r in recs)
+    from repro.checkpoint import checkpoint
+
+    tree, meta = checkpoint.restore(path)
+    assert meta == {"rounds": 3, "arch": "paper-cnn", "scenario": "none"}
+    assert "conv1" in tree
+
+
+def test_elastic_checkpoint_metadata_unified(tmp_path):
+    path = str(tmp_path / "ck")
+    sess = ElasticSession(_spec(scenario="burst", save_path=path))
+    sess.run()
+    from repro.checkpoint import checkpoint
+
+    tree, meta = checkpoint.restore(path)
+    assert meta["rounds"] == ROUNDS
+    assert meta["arch"] == "paper-cnn"
+    assert meta["scenario"] == "burst"
+    # the saved tree is the master, restorable against it
+    _assert_trees_bit_exact(tree, jax.tree.map(np.asarray,
+                                               sess.master_params))

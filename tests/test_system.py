@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
-from repro.core.coordinator import ElasticTrainer
+from repro.core.coordinator import ElasticTrainer, RoundInputs
 from repro.data.pipeline import WorkerBatcher
 from repro.data.synthetic import SyntheticImages
 from repro.models.registry import build_model
@@ -29,8 +29,9 @@ def _run(ds, method_kw, opt="adahessian", rounds=6, k=2, tau=1, seed=0,
     for r in range(rounds):
         batches = {k2: jnp.asarray(v) for k2, v in wb.round_batches().items()}
         fm = jnp.zeros(k, bool) if fail is None else jnp.asarray(fail[r])
-        state, m = tr.round_step(state, batches, jax.random.key(r), fm,
-                                 jnp.zeros(k, bool))
+        state, m = tr.round_step(state, RoundInputs(
+            batches=batches, rng=jax.random.key(r), fail=fm,
+            failed_recent=jnp.zeros(k, bool)))
     return acc0, float(tr.master_accuracy(state, test)), state, m
 
 
