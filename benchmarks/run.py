@@ -1,7 +1,11 @@
 """Benchmark harness — one section per paper table/figure plus the roofline,
-kernel microbenches and the session-API driver benchmark. Prints
+kernel microbenches and the session-API driver benchmarks. Prints
 ``name,us_per_call,derived`` CSV; ``--what session`` instead emits a single
-JSON record comparing per-round vs jit-chunked session wall time."""
+JSON record comparing per-round vs jit-chunked session wall time, and
+``--what placement`` a JSON record comparing single vs sharded placement
+per-round time at k ∈ {4, 8} (force a multi-device host with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the worker
+shards actually spread)."""
 import argparse
 import json
 
@@ -10,13 +14,19 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--what", default="all",
                     choices=["all", "kernels", "comm_modes", "paper",
-                             "roofline", "session"])
+                             "roofline", "session", "placement"])
     args = ap.parse_args(argv)
 
     if args.what == "session":
         from benchmarks import session_bench
 
         print(json.dumps(session_bench.bench_session()))
+        return
+
+    if args.what == "placement":
+        from benchmarks import session_bench
+
+        print(json.dumps(session_bench.bench_session_placement()))
         return
 
     from benchmarks import (kernels_bench, paper_figs, roofline_bench,

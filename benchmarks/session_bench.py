@@ -1,16 +1,26 @@
-"""Session execution benchmark: per-round dispatch vs jit-scanned chunks.
+"""Session execution benchmarks: chunking axis and placement axis.
 
 Times the *whole driver path* — host batching, mask slicing, jit dispatch,
-device compute — through ``ElasticSession`` at ``rounds_per_call=1`` vs a
-chunked setting, on the paper CNN at a size where per-round Python/dispatch
-overhead is a visible fraction of the round. Compilation is excluded by
-warming each session up over its first chunk(s) before the timed window;
-both settings reuse one session (the jit cache keys on the trainer
-instance, so a fresh session would recompile).
+device compute — through ``ElasticSession`` on the paper CNN at a size
+where per-round Python/dispatch overhead is a visible fraction of the
+round. Compilation is excluded by warming each session up over its first
+chunk(s) before the timed window; each setting reuses one session (the jit
+cache keys on the trainer instance, so a fresh session would recompile).
 
-``bench_session()`` returns the JSON-able record consumed by
-``benchmarks/run.py --what session``; ``bench()`` adapts it to the CSV
-section format of the main harness.
+Two axes:
+
+- ``bench_session()`` — ``rounds_per_call=1`` vs jit-scanned chunks
+  (``--what session``).
+- ``bench_session_placement()`` — single vs sharded placement at
+  k ∈ {4, 8} (``--what placement``). Run it under a forced multi-device
+  host (``XLA_FLAGS=--xla_force_host_platform_device_count=4``, as the CI
+  step does) to actually spread the worker shards; on one device the
+  sharded numbers measure pure shard_map overhead. Emulated CPU devices
+  share the same cores, so this records dispatch/collective overhead, not
+  a hardware speedup.
+
+Each returns a JSON-able record; ``bench()`` adapts the chunking record to
+the CSV section format of the main harness.
 """
 import time
 
@@ -39,6 +49,51 @@ def bench_session(rounds=8, chunk=4, warmup_rounds=None):
         record[f"{label}_ms_per_round"] = round(ms, 3)
     record["speedup"] = round(record["per_round_ms_per_round"]
                               / record["chunked_ms_per_round"], 3)
+    return record
+
+
+def bench_session_placement(rounds=6, ks=(4, 8)):
+    """Single vs sharded per-round wall time at each worker count.
+
+    One session per (k, placement). Sharded runs on an explicit host mesh
+    with pod = gcd(k, device_count) — the widest pod axis that divides k —
+    so the benchmark works on any device count instead of crashing when it
+    doesn't divide every k; the pod size used is recorded per k.
+    """
+    import math
+
+    import jax
+
+    from repro.api import ElasticSession, RunSpec
+    from repro.configs.base import ElasticConfig, OptimizerConfig
+    from repro.launch.mesh import make_host_mesh
+
+    record = {"what": "session_placement", "arch": "paper-cnn",
+              "devices": jax.device_count(), "tau": 1, "batch_size": 8,
+              "rounds_timed": rounds, "workers": list(ks)}
+    for k in ks:
+        pod = math.gcd(k, jax.device_count())
+        record[f"k{k}_pod"] = pod
+        for placement in ("single", "sharded"):
+            spec = RunSpec(
+                arch="paper-cnn",
+                optimizer=OptimizerConfig(name="sgd", lr=0.01),
+                elastic=ElasticConfig(num_workers=k, tau=1, dynamic=True,
+                                      comm_mode="fused",
+                                      placement=placement),
+                rounds=1 + rounds, seed=0, batch_size=8,
+                n_data=512, n_test=64)
+            mesh = (make_host_mesh(pod=pod) if placement == "sharded"
+                    else None)
+            sess = ElasticSession(spec, mesh=mesh)
+            sess.run(1)  # compile + first-touch outside the timed window
+            t0 = time.perf_counter()
+            sess.run(rounds)
+            ms = (time.perf_counter() - t0) / rounds * 1e3
+            record[f"k{k}_{placement}_ms_per_round"] = round(ms, 3)
+        record[f"k{k}_single_over_sharded"] = round(
+            record[f"k{k}_single_ms_per_round"]
+            / record[f"k{k}_sharded_ms_per_round"], 3)
     return record
 
 

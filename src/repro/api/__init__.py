@@ -1,4 +1,5 @@
-"""Unified run API for the paper's system (ISSUE-3).
+"""Unified run API for the paper's system (ISSUE-3; sharded placement
+ISSUE-4).
 
 One import surface for every driver — CLI, experiments, examples, tests,
 benchmarks:
@@ -9,12 +10,24 @@ benchmarks:
     for rec in ElasticSession(spec).run_iter():
         print(rec.round, rec.loss, rec.h2)
 
-:class:`RunSpec` captures everything a run needs (architecture, optimizer,
-elastic/failure config, data source, scenario, seed, eval cadence,
-checkpoint path); :class:`ElasticSession` owns the trainer state, failure
-schedule, batcher and eval, and yields structured :class:`RoundRecord`\\ s.
-``rounds_per_call > 1`` executes whole chunks of rounds inside one jit
-(``ElasticTrainer.round_chunk``) bit-identically to per-round execution.
+Exports (see docs/paper_map.md for the full paper→code table):
+
+- :class:`RunSpec` — frozen, validated description of a run: architecture,
+  optimizer, elastic/failure config, data source, scenario, seed, eval
+  cadence, checkpoint path. Infrastructure, no paper analogue — it *names*
+  the paper's experimental knobs (§VI: k, τ, α, overlap ratio r, failure
+  probability) but the dataclass itself is driver plumbing.
+- :class:`ElasticSession` — the paper's training loop (§V algorithm 1's
+  outer rounds): owns trainer state, failure schedule, worker batcher and
+  eval, yields structured records. ``rounds_per_call > 1`` executes whole
+  chunks of rounds inside one jit (``ElasticTrainer.round_chunk``)
+  bit-identically to per-round execution;
+  ``ElasticConfig.placement="sharded"`` places the worker axis over the
+  mesh's 'pod' axis (beyond-paper scale path, master bit-exact with the
+  single-device simulation).
+- :class:`RoundRecord` — one communication round materialized on the host:
+  the §V-B diagnostics (u = log-distance, raw score a, h1/h2 weights) plus
+  the schedule row and optional held-out master metrics (the §VI curves).
 """
 from repro.api.session import ElasticSession, RoundRecord, RunSpec
 

@@ -24,6 +24,16 @@ execution are bit-identical (``tests/test_session.py`` asserts master-param
 equality); chunk boundaries are snapped to eval rounds so the eval cadence
 never changes results. Scenarios that never straggle/restart keep those
 inputs ``None``, preserving the specialized single-trace fast path.
+
+Sharded placement (``ElasticConfig.placement = "sharded"``): the session
+builds (or accepts) a mesh whose ``'pod'`` axis hosts the worker shards,
+device_puts the trainer state into its sharded-resident layout once at
+init, and drives ``round_step_sharded`` / ``round_chunk_sharded`` instead —
+the k workers' local+comm phases run on disjoint mesh shards with one
+master reduction per round, bit-exact with single-device fused mode
+(``tests/test_placement.py``). Records, eval and checkpointing are
+placement-agnostic: the master is replicated, so everything host-side reads
+identically.
 """
 from __future__ import annotations
 
@@ -144,20 +154,43 @@ class ElasticSession:
     cadence is independent of the chunking. When the full ``spec.rounds``
     have run and ``spec.save_path`` is set, the master checkpoint is saved
     automatically with ``{"rounds", "arch", "scenario"}`` metadata.
+
+    Under ``spec.elastic.placement == "sharded"`` the session drives the
+    shard_mapped round fns; ``mesh`` overrides the default
+    ``make_host_mesh(pod=jax.device_count())`` (it needs a 'pod' axis whose
+    size divides ``num_workers``). The trainer state lives device-resident
+    in its sharded layout from init: worker-axis entries split over 'pod',
+    master replicated, with the donated round fns updating it in place.
     """
 
-    def __init__(self, spec: RunSpec):
+    def __init__(self, spec: RunSpec, mesh=None):
         self.spec = spec
         cfg = spec.model_cfg or get_config(spec.arch, smoke=spec.smoke)
         self.model_cfg = cfg
         self.model = build_model(cfg)
         ecfg = spec.elastic
         if spec.plain:
+            # the k=1 limit has no worker axis to place
             ecfg = dataclasses.replace(ecfg, num_workers=1, tau=1,
-                                       overlap_ratio=0.0, failure_prob=0.0)
+                                       overlap_ratio=0.0, failure_prob=0.0,
+                                       placement="single")
         self.ecfg = ecfg
+        self._sharded = ecfg.placement == "sharded"
+        if not self._sharded and mesh is not None:
+            raise ValueError(
+                "ElasticSession: a mesh was passed but "
+                f"placement={ecfg.placement!r} would ignore it — set "
+                "ElasticConfig(placement='sharded', comm_mode='fused') to "
+                "place the worker axis on it")
+        if self._sharded and mesh is None:
+            # default mesh: every visible device becomes one worker shard
+            from repro.launch.mesh import make_host_mesh
+
+            mesh = make_host_mesh(pod=jax.device_count())
+        self.mesh = mesh
         self.trainer = ElasticTrainer(self.model, spec.optimizer, ecfg,
-                                      use_pallas=spec.use_pallas)
+                                      use_pallas=spec.use_pallas,
+                                      mesh=self.mesh)
         # -- data -----------------------------------------------------------
         if cfg.family == "cnn":
             ds = SyntheticImages(n=spec.n_data, n_test=spec.n_test,
@@ -202,11 +235,28 @@ class ElasticSession:
                     lambda s, x: step(s, x[0], x[1]), st, xs))
         else:
             self.state = self.trainer.init_state(jax.random.key(spec.seed))
+            if self._sharded:
+                self.state = self._place_state(self.state)
         self._rng_base = jax.random.key(spec.seed)
         self._eval_loss = jax.jit(lambda p, b: self.model.loss(p, b)[0])
         self._eval_acc = (jax.jit(self.model.accuracy)
                           if hasattr(self.model, "accuracy") else None)
         self.round = 0  # rounds completed so far
+
+    # -- sharded placement ---------------------------------------------------
+    def _place_state(self, state):
+        """Device_put the trainer state into its sharded-resident layout,
+        per entry as declared by ``ElasticTrainer.state_shard_specs`` (the
+        same specs shard_map runs under, so there is no per-call
+        resharding). Done once at init; the donated sharded round fns then
+        keep the state resident in this layout for the whole run."""
+        from jax.sharding import NamedSharding
+
+        specs = self.trainer.state_shard_specs()
+        return {key: jax.tree.map(
+                    lambda x, s=specs[key]: jax.device_put(
+                        x, NamedSharding(self.mesh, s)), sub)
+                for key, sub in state.items()}
 
     # -- eval ---------------------------------------------------------------
     @property
@@ -282,7 +332,9 @@ class ElasticSession:
                 straggle=None if straggle is None
                 else jnp.asarray(straggle[0]),
                 restart=None if restart is None else jnp.asarray(restart[0]))
-            self.state, m = self.trainer.round_step(self.state, inputs)
+            step = (self.trainer.round_step_sharded if self._sharded
+                    else self.trainer.round_step)
+            self.state, m = step(self.state, inputs)
             m = jax.tree.map(lambda x: np.asarray(x)[None], m)
         else:
             inputs = RoundInputs(
@@ -292,7 +344,9 @@ class ElasticSession:
                 failed_recent=jnp.asarray(self._failed_recent[lo:hi]),
                 straggle=None if straggle is None else jnp.asarray(straggle),
                 restart=None if restart is None else jnp.asarray(restart))
-            self.state, m = self.trainer.round_chunk(self.state, inputs)
+            chunk = (self.trainer.round_chunk_sharded if self._sharded
+                     else self.trainer.round_chunk)
+            self.state, m = chunk(self.state, inputs)
             m = jax.tree.map(np.asarray, m)
         self.round = hi
         records = []

@@ -147,6 +147,15 @@ class ElasticConfig:
     # event-order-equivalent weights, workers sync against the round-start
     # master (delayed averaging à la DaSGD).
     comm_mode: str = "sequential"     # sequential | fused
+    # Execution placement (repro/core/coordinator.py). "single" simulates all
+    # k workers on one device (vmap over the worker axis). "sharded" places
+    # the worker axis over the mesh's 'pod' axis via shard_map: the local
+    # phase runs fully parallel per shard and the fused comm phase scores
+    # per-shard, reducing into the master with an event-order-equivalent
+    # cross-pod collective. Requires comm_mode="fused" — the sequential
+    # backend is an event-ordered scan over workers (each sync reads the
+    # master the previous worker just wrote) and cannot shard.
+    placement: str = "single"         # single | sharded
     # Failure scenario engine (repro/core/scenarios.py). "iid" is the paper's
     # Bernoulli model; the other regimes reuse failure_prob as their
     # stationary fault rate plus the knobs below.
@@ -161,6 +170,15 @@ class ElasticConfig:
             raise ValueError(
                 f"comm_mode must be 'sequential' or 'fused', "
                 f"got {self.comm_mode!r}")
+        if self.placement not in ("single", "sharded"):
+            raise ValueError(
+                f"placement must be 'single' or 'sharded', "
+                f"got {self.placement!r}")
+        if self.placement == "sharded" and self.comm_mode != "fused":
+            raise ValueError(
+                "placement='sharded' requires comm_mode='fused': the "
+                "sequential backend is an event-ordered scan over workers "
+                "and cannot be placed on disjoint mesh shards")
         if self.failure_scenario not in FAILURE_SCENARIOS:
             raise ValueError(
                 f"failure_scenario must be one of {FAILURE_SCENARIOS}, "

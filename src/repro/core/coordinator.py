@@ -25,9 +25,32 @@ One round =
      elastic update (Pallas kernel on TPU), with event-order-equivalent
      master weights so the two masters agree whenever per-worker h2 do.
 
-The same object serves the paper-scale CPU simulation (k∈{4,8}, CNN) and the
-production multi-pod path (worker axis sharded over the 'pod' mesh axis; see
-repro/launch/dryrun.py).
+Placement (``ecfg.placement``) picks where the k workers live:
+
+- ``"single"`` — all k workers simulated on one device (``vmap`` over the
+  worker axis); both comm modes available. This is the paper's setting.
+- ``"sharded"`` — the worker axis is partitioned over the mesh's ``'pod'``
+  axis via ``shard_map`` (``round_step_sharded`` / ``round_chunk_sharded``):
+  each shard runs its k/n_pods workers' local phase fully in parallel and
+  scores them locally; cross-shard traffic per round is the fused master
+  reduction (an all-gather of k scalars for the event-order schedule
+  weights plus one worker-axis all-gather of the weighted pulls, reduced
+  with the same (k, ...)-shaped sum as the single-device path — so the
+  sharded master is **bit-exact** with single-device fused mode) plus one
+  scalar psum for the mean-loss metric. Requires
+  ``comm_mode="fused"``: the sequential backend is an event-ordered scan
+  where each worker reads the master the previous one wrote, a serial
+  dependency that cannot be placed on disjoint shards. Any extra mesh axes
+  ('data', 'model') are currently *replicated* inside the sharded round —
+  fully-manual shard_map; leaving them in the ``auto`` set so GSPMD shards
+  each worker's model within its pod is the intended endgame, but this
+  XLA version's partitioner aborts on partial-auto transformer bodies
+  (see ``_round_sharded``). The production multi-pod lowering in
+  repro/launch/dryrun.py reuses exactly these entry points.
+
+Both placements run the same ``_round`` body; the sharded path threads the
+mesh axis name through the local/comm phases, which switch their few
+cross-worker reductions (mean loss, master reduction) to collectives.
 """
 from __future__ import annotations
 
@@ -48,6 +71,11 @@ from repro.optim.hutchinson import hessian_diag
 def tree_stack_copies(tree, k: int):
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (k,) + x.shape).copy(),
                         tree)
+
+
+# Mesh axis hosting the worker shards under sharded placement (the
+# production meshes in repro/launch/mesh.py name it the same).
+POD_AXIS = "pod"
 
 
 @jax.tree_util.register_dataclass
@@ -85,9 +113,25 @@ class ElasticTrainer:
     opt_cfg: OptimizerConfig
     ecfg: ElasticConfig
     use_pallas: bool = False
+    # sharded placement only: mesh whose 'pod' axis hosts the worker shards
+    mesh: Any = None
 
     def __post_init__(self):
         self.opt = make_optimizer(self.opt_cfg)
+        if self.ecfg.placement == "sharded":
+            if self.mesh is None:
+                raise ValueError(
+                    "placement='sharded' needs a mesh with a 'pod' axis "
+                    "(see repro.launch.mesh.make_host_mesh)")
+            if POD_AXIS not in self.mesh.shape:
+                raise ValueError(
+                    f"sharded placement needs a {POD_AXIS!r} mesh axis, "
+                    f"mesh has {tuple(self.mesh.shape)}")
+            n_pod = self.mesh.shape[POD_AXIS]
+            if self.ecfg.num_workers % n_pod:
+                raise ValueError(
+                    f"num_workers={self.ecfg.num_workers} must divide "
+                    f"evenly over the {n_pod}-way {POD_AXIS!r} mesh axis")
 
     # -- state ----------------------------------------------------------------
     def init_state(self, rng: jax.Array, params=None):
@@ -104,8 +148,10 @@ class ElasticTrainer:
             "opt": worker_opt,
             "master": master,
             # previous-round master snapshot: the stale estimate straggling
-            # workers score against (scenario engine, repro/core/scenarios.py)
-            "master_prev": master,
+            # workers score against (scenario engine, repro/core/scenarios.py).
+            # A distinct buffer, not an alias of "master": round_step donates
+            # the state, and donation rejects the same buffer appearing twice.
+            "master_prev": jax.tree.map(jnp.copy, master),
             "u_hist": jnp.full((k, self.ecfg.score_window), -30.0,
                                jnp.float32),
             "round": jnp.zeros((), jnp.int32),
@@ -150,24 +196,53 @@ class ElasticTrainer:
         params = apply_updates(params, updates)
         return params, opt_state, loss
 
-    def local_phase(self, state, batches, rng, straggle=None):
+    def local_phase(self, state, batches, rng, straggle=None, axis=None):
         """batches: pytree with leading (τ, k, ...) axes.
 
         ``straggle``: optional (k,) bool — straggling workers are slow, not
         dead: they complete only the first
         ``max(1, round(straggler_tau_scale·τ))`` local steps; params and
         optimizer state freeze for the rest of the phase.
+
+        ``axis``: mesh axis name when running inside ``shard_map`` (sharded
+        placement). The worker axis of every input then holds only this
+        shard's k/n_pods workers; each worker's τ steps are computed exactly
+        as in single placement (the per-worker PRNG keys are split from the
+        global key and sliced by shard, so worker i sees identical keys
+        under either placement) and the only collective is one scalar psum
+        of the loss/active-count totals *after* the τ-step scan — the τ
+        local steps themselves run with zero cross-shard traffic. (This
+        re-associates the mean-loss reduction, which is why that metric —
+        and only that metric — is last-ulp-tolerant across placements.)
         """
         k = self.ecfg.num_workers
         tau = jax.tree.leaves(batches)[0].shape[0]
+        k_loc = jax.tree.leaves(batches)[0].shape[1]
         tau_eff = max(1, round(self.ecfg.straggler_tau_scale * tau))
 
         def tau_step(carry, inp):
             params, opt_state = carry
             batch_t, rng_t, t = inp
             rngs = jax.random.split(rng_t, k)
-            new_p, new_o, loss = jax.vmap(self._one_step)(
-                params, opt_state, batch_t, rngs)
+            if axis is not None:
+                i0 = jax.lax.axis_index(axis) * k_loc
+                rngs = jax.lax.dynamic_slice_in_dim(rngs, i0, k_loc)
+            if axis is not None and k_loc == 1:
+                # one worker per shard: run it unbatched. A vmap over a
+                # singleton worker axis lowers the conv weight-gradient
+                # differently from wider vmaps and breaks master bit-
+                # exactness with single placement; the unbatched gradient
+                # matches any width >= 2 bit-for-bit
+                # (tests/test_placement.py holds the line).
+                sq = lambda t: jax.tree.map(lambda x: x[0], t)
+                p1, o1, loss = self._one_step(sq(params), sq(opt_state),
+                                              sq(batch_t), rngs[0])
+                new_p = jax.tree.map(lambda x: x[None], p1)
+                new_o = jax.tree.map(lambda x: x[None], o1)
+                loss = loss[None]
+            else:
+                new_p, new_o, loss = jax.vmap(self._one_step)(
+                    params, opt_state, batch_t, rngs)
             if straggle is not None:
                 # frozen steps contribute neither updates nor loss metrics
                 active = jnp.logical_or(~straggle, t < tau_eff)
@@ -176,20 +251,25 @@ class ElasticTrainer:
                 new_p = jax.tree.map(sel, new_p, params)
                 new_o = jax.tree.map(sel, new_o, opt_state)
                 loss = jnp.where(active, loss, 0.0)
-                n_active = jnp.sum(active)
+                active_f = active
             else:
-                n_active = jnp.asarray(k)
-            return (new_p, new_o), (jnp.sum(loss), n_active)
+                active_f = jnp.ones_like(loss, bool)
+            return (new_p, new_o), (jnp.sum(loss), jnp.sum(active_f))
 
         rngs = jax.random.split(rng, tau)
         (workers, opt_state), (losses, counts) = jax.lax.scan(
             tau_step, (state["workers"], state["opt"]),
             (batches, rngs, jnp.arange(tau)))
-        mean_loss = jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1)
+        sum_loss, n_active = jnp.sum(losses), jnp.sum(counts)
+        if axis is not None:
+            # one collective for the whole phase: metric totals only
+            sum_loss, n_active = jax.lax.psum((sum_loss, n_active), axis)
+        mean_loss = sum_loss / jnp.maximum(n_active, 1)
         return dict(state, workers=workers, opt=opt_state), mean_loss
 
     # -- communication phase -----------------------------------------------------
-    def comm_phase(self, state, fail_mask, failed_recent=None, straggle=None):
+    def comm_phase(self, state, fail_mask, failed_recent=None, straggle=None,
+                   axis=None):
         """fail_mask: (k,) bool — True suppresses this worker's sync.
 
         ``straggle``: optional (k,) bool — straggling workers score against
@@ -199,14 +279,18 @@ class ElasticTrainer:
 
         Dispatches on ``ecfg.comm_mode``: "sequential" is the paper's
         event-ordered scan; "fused" batches all k syncs into one scoring
-        pass plus one multi-worker elastic update.
+        pass plus one multi-worker elastic update. ``axis`` (sharded
+        placement) is fused-only — the sequential scan's serial master
+        dependency cannot shard.
         """
         ecfg = self.ecfg
         if failed_recent is None:
             failed_recent = jnp.zeros_like(fail_mask)
         if ecfg.comm_mode == "fused":
             return self._comm_phase_fused(state, fail_mask, failed_recent,
-                                          straggle)
+                                          straggle, axis)
+        if axis is not None:  # unreachable: ElasticConfig validates this
+            raise ValueError("sequential comm cannot run sharded")
         stale_master = state.get("master_prev", state["master"])
         straggle_in = (jnp.zeros_like(fail_mask) if straggle is None
                        else straggle)
@@ -246,7 +330,7 @@ class ElasticTrainer:
                     round=state["round"] + 1), metrics
 
     def _comm_phase_fused(self, state, fail_mask, failed_recent,
-                          straggle=None):
+                          straggle=None, axis=None):
         """Batched communication: one vmapped scoring pass over all k
         workers, then a single multi-worker elastic update.
 
@@ -256,6 +340,14 @@ class ElasticTrainer:
         sequential scan exactly whenever the per-worker h2 agree (e.g. the
         fixed-α and oracle modes). Scores are computed against the same
         round-start master, which drops the scan's serial dependency.
+
+        ``axis`` (sharded placement): scoring runs on this shard's local
+        workers against the replicated master; the schedule weighting
+        all-gathers the k h2 scalars and the elastic update all-gathers the
+        weighted pulls for a reduction bit-exact with the single-device
+        path. The Pallas kernel covers the single-device fused path only —
+        per-shard the update is the plain jnp expression, which XLA fuses
+        fine at k/n_pods workers per device.
         """
         ecfg = self.ecfg
         master = state["master"]
@@ -268,8 +360,8 @@ class ElasticTrainer:
         # suppressed communication: no elastic exchange at all
         w1 = jnp.where(fail_mask, 0.0, w1)
         w2 = jnp.where(fail_mask, 0.0, w2)
-        g2 = dw.master_schedule_weights(w2)
-        if self.use_pallas:
+        g2 = dw.master_schedule_weights(w2, axis_name=axis)
+        if self.use_pallas and axis is None:
             from repro.kernels.elastic.ops import elastic_update_batched_pallas
 
             workers, master = elastic_update_batched_pallas(
@@ -277,41 +369,129 @@ class ElasticTrainer:
                 interpret=jax.default_backend() != "tpu")
         else:
             workers, master = elastic_update_batched(
-                state["workers"], master, w1, g2)
+                state["workers"], master, w1, g2, axis_name=axis)
         metrics = {"u": u, "score": a, "h1": w1, "h2": w2}
         return dict(state, workers=workers, master=master,
                     master_prev=state["master"], u_hist=hist,
                     round=state["round"] + 1), metrics
 
     # -- full round ---------------------------------------------------------------
-    def _round(self, state, inputs: RoundInputs):
+    def _round(self, state, inputs: RoundInputs, axis=None):
         """One simulated round under a failure scenario: optional crash
         rejoins, the local phase (with per-worker straggler slowdown), then
-        the communication phase under the fail mask."""
+        the communication phase under the fail mask. ``axis`` names the
+        worker-hosting mesh axis inside ``shard_map`` (sharded placement);
+        ``apply_restarts`` is per-worker against the replicated master, so
+        it needs no axis awareness."""
         if inputs.restart is not None:
             state = self.apply_restarts(state, inputs.restart)
         state, loss = self.local_phase(state, inputs.batches, inputs.rng,
-                                       inputs.straggle)
+                                       inputs.straggle, axis=axis)
         state, metrics = self.comm_phase(state, inputs.fail,
                                          inputs.failed_recent,
-                                         inputs.straggle)
+                                         inputs.straggle, axis=axis)
         metrics["loss"] = loss
         return state, metrics
 
-    @functools.partial(jax.jit, static_argnums=0)
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
     def round_step(self, state, inputs: RoundInputs):
-        """One round per jit call; ``inputs`` leaves are per-round."""
+        """One round per jit call; ``inputs`` leaves are per-round.
+
+        ``state`` is donated: the output state reuses the input buffers, so
+        a run holds one copy of the (k × params)-sized worker state instead
+        of double-buffering it across calls. Don't reuse a state object
+        after passing it in — keep the returned one.
+        """
         return self._round(state, inputs)
 
-    @functools.partial(jax.jit, static_argnums=0)
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
     def round_chunk(self, state, inputs: RoundInputs):
         """R rounds in one jit call: every ``inputs`` leaf carries a leading
         (R,) axis and ``lax.scan`` threads the state through the rounds, so
         the Python/dispatch cost of a round is paid once per chunk. The
         scanned body is exactly ``round_step``'s, so a chunked run is
         bit-identical to R separate ``round_step`` calls; metrics come back
-        stacked with a leading (R,) axis."""
+        stacked with a leading (R,) axis. ``state`` is donated, as in
+        ``round_step``."""
         return jax.lax.scan(self._round, state, inputs)
+
+    # -- sharded placement entry points -------------------------------------------
+    def state_shard_specs(self):
+        """Per-entry partition specs of the trainer state under sharded
+        placement: worker-axis entries split over 'pod', master and
+        counters replicated. The single source of truth for both the
+        shard_map in/out specs (``_shard_specs``) and the session's
+        device-resident state layout (``ElasticSession._place_state``) —
+        a new state entry added here is placed consistently everywhere.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        wrk, rep = P(POD_AXIS), P()
+        return {"workers": wrk, "opt": wrk, "master": rep,
+                "master_prev": rep, "u_hist": wrk, "round": rep}
+
+    def _shard_specs(self, inputs: RoundInputs, chunk: bool):
+        """``shard_map`` partition specs for (state, inputs, metrics).
+
+        Worker-axis leaves split over the 'pod' axis; the master, the PRNG
+        keys and the round counter replicate. Specs are pytree prefixes, so
+        ``None`` scenario fields (straggle/restart) mirror the input's
+        Noneness and keep the specialized trace. ``chunk`` prepends the
+        (R,) rounds axis, which is never sharded.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        lead = (None,) if chunk else ()
+        wrk = P(*lead, POD_AXIS)
+        rep = P()
+        state_spec = self.state_shard_specs()
+        mask = lambda x: None if x is None else wrk
+        in_spec = RoundInputs(
+            batches=P(*lead, None, POD_AXIS),  # (R?, τ, k, ...)
+            rng=rep,
+            fail=wrk, failed_recent=mask(inputs.failed_recent),
+            straggle=mask(inputs.straggle), restart=mask(inputs.restart))
+        met_spec = {"u": wrk, "score": wrk, "h1": wrk, "h2": wrk,
+                    "loss": rep}
+        return state_spec, in_spec, met_spec
+
+    def _round_sharded(self, state, inputs: RoundInputs, chunk: bool):
+        """Shared body of the sharded jits: ``shard_map`` the round (or the
+        R-round scan) over the mesh, fully manual. Specs mention only the
+        'pod' axis, so any 'data'/'model' axes replicate the per-worker
+        computation — exactly equivalent on the size-1 host-mesh axes.
+        (Leaving those axes in ``shard_map``'s ``auto`` set so GSPMD shards
+        each worker's model *within* its pod is the intended production
+        endgame, but this jax/XLA version's SPMD partitioner hard-aborts on
+        partial-auto transformer bodies — hlo_sharding_util
+        ``IsManualSubgroup`` check — so within-pod model sharding waits on
+        an XLA upgrade.)"""
+        from jax.experimental.shard_map import shard_map
+
+        state_spec, in_spec, met_spec = self._shard_specs(inputs, chunk)
+        step = functools.partial(self._round, axis=POD_AXIS)
+        body = (lambda s, i: jax.lax.scan(step, s, i)) if chunk else step
+        fn = shard_map(
+            body, self.mesh,
+            in_specs=(state_spec, in_spec),
+            out_specs=(state_spec, met_spec),
+            check_rep=False)
+        return fn(state, inputs)
+
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def round_step_sharded(self, state, inputs: RoundInputs):
+        """``round_step`` with the worker axis placed over the mesh's 'pod'
+        axis. Master params are bit-exact with single-device fused mode
+        (tests/test_placement.py); ``state`` is donated and stays resident
+        in its sharded layout across calls."""
+        return self._round_sharded(state, inputs, chunk=False)
+
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def round_chunk_sharded(self, state, inputs: RoundInputs):
+        """``round_chunk`` under sharded placement: the R-round ``lax.scan``
+        runs *inside* ``shard_map``, so one jit call executes R rounds with
+        the worker axis on hardware and per-round collectives only."""
+        return self._round_sharded(state, inputs, chunk=True)
 
     # -- eval ----------------------------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)

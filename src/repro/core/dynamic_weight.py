@@ -82,6 +82,12 @@ def comm_scores_batched(cfg: ElasticConfig, worker_stacked, master_params,
     their distance against the stale master snapshot instead (their estimate
     of the master lags — scenario engine, repro/core/scenarios.py).
 
+    Every quantity here is per-worker-independent (the master is a shared
+    read-only input), so under sharded placement each mesh shard calls this
+    on its local (k/n_pods,) worker slice unchanged — no collectives. The
+    one cross-worker quantity in the fused comm phase is the master
+    schedule weighting; see :func:`master_schedule_weights`'s ``axis_name``.
+
     Returns ``(u, hist_new, a, w1, w2)`` with leading (k,) axes.
     """
     u = log_distance_batched(worker_stacked, master_params)
@@ -94,7 +100,7 @@ def comm_scores_batched(cfg: ElasticConfig, worker_stacked, master_params,
     return u, hist_new, a, w1, w2
 
 
-def master_schedule_weights(w2: jax.Array) -> jax.Array:
+def master_schedule_weights(w2: jax.Array, *, axis_name=None) -> jax.Array:
     """Event-order-equivalent master weights for the batched reduction.
 
     The sequential scan applies θ^m ← θ^m + h2_i (θ^i − θ^m) worker by
@@ -107,7 +113,19 @@ def master_schedule_weights(w2: jax.Array) -> jax.Array:
     master bit-for-bit (up to float associativity). A suppressed worker
     (h2_i = 0) contributes g_i = 0 and leaves the other factors untouched,
     exactly like the sequential skip.
+
+    With ``axis_name`` (sharded placement, inside ``shard_map``): ``w2`` is
+    this shard's local slice in worker order, g_i couples every worker
+    (Π over j > i crosses shard boundaries), so the full (k,) h2 vector is
+    all-gathered — k scalars, negligible traffic — the weights are computed
+    identically on every shard, and the local slice is returned.
     """
+    if axis_name is not None:
+        k_loc = w2.shape[0]
+        w2_all = jax.lax.all_gather(w2, axis_name, axis=0, tiled=True)
+        g_all = master_schedule_weights(w2_all)
+        i0 = jax.lax.axis_index(axis_name) * k_loc
+        return jax.lax.dynamic_slice_in_dim(g_all, i0, k_loc)
     om = 1.0 - jnp.asarray(w2, jnp.float32)
     rev = om[::-1]
     excl = jnp.concatenate(

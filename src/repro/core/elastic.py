@@ -33,7 +33,8 @@ def elastic_update(worker_params, master_params, w1, w2):
     return _unzip_pairs(jax.tree.map(upd, worker_params, master_params))
 
 
-def elastic_update_batched(worker_stacked, master_params, w1, w2):
+def elastic_update_batched(worker_stacked, master_params, w1, w2,
+                           axis_name=None):
     """All k worker exchanges plus the master reduction in one batched pass.
 
     ``worker_stacked`` leaves have a leading worker axis (k, ...); w1/w2 are
@@ -44,6 +45,15 @@ def elastic_update_batched(worker_stacked, master_params, w1, w2):
 
     Pass ``dynamic_weight.master_schedule_weights(h2)`` as ``w2`` to make the
     master reduction exactly match the sequential event-ordered scan.
+
+    With ``axis_name`` (sharded placement, inside ``shard_map``): the leading
+    axis holds only this shard's k/n_pods workers and the master reduction
+    becomes a cross-pod collective. The worker pull stays shard-local; the
+    weighted diffs are all-gathered along the worker axis and reduced with
+    the *same* (k, ...)-shaped sum as the single-device path — an all-reduce
+    decomposed as all-gather + local reduction — so the sharded master is
+    bit-exact with the single-device fused master (a ``psum`` of per-shard
+    partial sums would differ in the last ulp from re-associating the sum).
     """
     w1 = jnp.asarray(w1, jnp.float32)
     w2 = jnp.asarray(w2, jnp.float32)
@@ -54,7 +64,10 @@ def elastic_update_batched(worker_stacked, master_params, w1, w2):
         wf = ws.astype(jnp.float32)
         mf = m.astype(jnp.float32)
         diff = wf - mf[None]
+        pull = h2 * diff
+        if axis_name is not None:
+            pull = jax.lax.all_gather(pull, axis_name, axis=0, tiled=True)
         return ((wf - h1 * diff).astype(ws.dtype),
-                (mf + jnp.sum(h2 * diff, axis=0)).astype(m.dtype))
+                (mf + jnp.sum(pull, axis=0)).astype(m.dtype))
 
     return _unzip_pairs(jax.tree.map(upd, worker_stacked, master_params))

@@ -1,9 +1,17 @@
-"""Data overlap partition (paper §V-A).
+"""Data overlap partition (paper §V-A, "data distribution method").
 
 All k workers share a random subset O with |O| = round(r·n); the remainder
-D − O is split disjointly:  D_j = O ∪ S_j,  |S_j| = ⌊(n−o)/k⌋.
+D − O is split disjointly:  D_j = O ∪ S_j,  |S_j| = ⌊(n−o)/k⌋. The overlap
+ratio r = o/n is the paper's hedge against losing a worker's unique shard
+for good: when worker j dies, only S_j's information is at risk, and the
+shared O keeps the survivors' gradients correlated enough for the master
+to keep improving (§VI uses r = 0.25 at k = 4, 0.125 at k = 8 —
+``ElasticConfig.overlap_ratio``).
 
-Host-side (numpy) — this feeds the data pipeline, not the jitted graph.
+Host-side (numpy) — this feeds the data pipeline
+(``repro.data.pipeline.WorkerBatcher``), not the jitted graph; both
+placements consume the same host-built batches, so the partition is
+placement-independent by construction.
 """
 from __future__ import annotations
 
@@ -15,7 +23,8 @@ import numpy as np
 def overlap_partition(
     n: int, k: int, ratio: float, seed: int = 0
 ) -> Tuple[np.ndarray, List[np.ndarray]]:
-    """Returns (overlap_indices, [per-worker unique indices])."""
+    """The §V-A split itself: returns (overlap indices O, [per-worker
+    unique index sets S_j]); deterministic in ``seed``."""
     if not 0.0 <= ratio < 1.0:
         raise ValueError(f"overlap ratio must be in [0,1), got {ratio}")
     rng = np.random.default_rng(seed)
@@ -30,7 +39,9 @@ def overlap_partition(
 
 def worker_datasets(n: int, k: int, ratio: float, seed: int = 0
                     ) -> List[np.ndarray]:
-    """D_j = O ∪ S_j index arrays (shuffled per worker, deterministic)."""
+    """Each worker's dataset D_j = O ∪ S_j as index arrays (shuffled per
+    worker, deterministic) — what the batcher samples worker j's τ local
+    steps from each round (§V-A)."""
     overlap, uniques = overlap_partition(n, k, ratio, seed)
     rng = np.random.default_rng(seed + 1)
     out = []

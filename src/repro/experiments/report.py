@@ -239,9 +239,10 @@ See the bottom of this file (§Claims) for the claim-by-claim verdicts.
 
 ## §Dry-run — 10 archs × 4 shapes × 2 meshes
 
-`train_4k` lowers `train_step` (single-pod) and the **elastic
-`round_step`** — vmapped workers over the 'pod' axis + dynamic-weight sync —
-(multi-pod). Decode shapes lower `serve_step` (one token, full cache);
+`train_4k` lowers `train_step` (single-pod) and the **sharded elastic
+round** — the real `round_step_sharded`: worker axis shard_mapped over the
+'pod' axis + dynamic-weight sync — (multi-pod). Decode shapes lower
+`serve_step` (one token, full cache);
 `prefill_32k` lowers the prefill step. long_500k runs only on sub-quadratic/
 windowed archs (5 of 10; skips documented in DESIGN.md).
 

@@ -1,8 +1,19 @@
-"""Production meshes.
+"""Mesh builders for every execution placement (infrastructure, no direct
+paper analogue — the paper simulates k workers on one device; these meshes
+are where the reproduction's *sharded* placement puts them on hardware).
 
-Single pod: (16, 16) = 256 chips, axes ('data', 'model').
-Multi-pod:  (2, 16, 16) = 512 chips, axes ('pod', 'data', 'model') — the
-'pod' axis hosts the paper's elastic *workers* (one worker per pod).
+Axis convention (shared with ``repro.core.coordinator``):
+
+- ``'pod'`` — hosts the paper's elastic *workers* under
+  ``ElasticConfig.placement = "sharded"``: the (k, ...) worker axis of the
+  trainer state is partitioned over it via ``shard_map``
+  (k % pod_size == 0), one master reduction crossing it per round.
+- ``'data'`` / ``'model'`` — ordinary GSPMD axes for sharding each worker's
+  model replica *within* a pod; the sharded coordinator leaves them in
+  ``shard_map``'s ``auto`` set.
+
+Production: single pod (16, 16) = 256 chips, axes ('data', 'model');
+multi-pod (2, 16, 16) = 512 chips, axes ('pod', 'data', 'model').
 
 Defined as functions so importing this module never touches jax device
 state (the dry-run sets XLA_FLAGS before any jax import; tests run with the
@@ -15,17 +26,27 @@ from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The target hardware meshes (requires that many real/forced devices).
+
+    ``multi_pod=False``: (16, 16) axes ('data', 'model') — one worker, the
+    single-placement regime at scale. ``multi_pod=True``: (2, 16, 16) axes
+    ('pod', 'data', 'model') — one elastic worker per pod, the mesh the
+    sharded coordinator and ``launch/dryrun.py`` lower against.
+    """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
 def make_host_mesh(*, data: int = 1, model: int = 1, pod: int = 1) -> Mesh:
-    """Small mesh over however many (host) devices exist — for tests."""
-    axes, shape = [], []
-    if pod > 1:
-        axes.append("pod")
-        shape.append(pod)
-    axes += ["data", "model"]
-    shape += [data, model]
-    return jax.make_mesh(tuple(shape), tuple(axes))
+    """Small ('pod', 'data', 'model') mesh over the host's devices — for
+    tests, CPU smoke runs and the sharded-placement default
+    (``ElasticSession`` builds ``make_host_mesh(pod=jax.device_count())``).
+    Always carries all three axes (size-1 axes are free) so host meshes and
+    the multi-pod production mesh expose the same axis names; uses the
+    first pod·data·model visible devices (emulate a multi-device CPU host
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before
+    jax initializes — that exact spelling; jax reads no other env var for
+    this).
+    """
+    return jax.make_mesh((pod, data, model), ("pod", "data", "model"))

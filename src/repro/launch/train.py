@@ -11,7 +11,12 @@ same code on the host mesh. ``--arch`` takes any assigned architecture id
 (smoke variant with ``--smoke``) or ``paper-cnn``. ``--rounds-per-call R``
 executes R rounds per jit call (``ElasticTrainer.round_chunk``) —
 bit-identical to per-round execution, but the per-round driver overhead is
-paid once per chunk.
+paid once per chunk. ``--placement sharded`` (with ``--comm-mode fused``)
+places the worker axis over the mesh's 'pod' axis via shard_map instead of
+simulating all k workers on one device — master params stay bit-exact with
+single placement; force a multi-device CPU host with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to exercise it
+without TPUs (with one device, sharded runs on a 1-way pod axis).
 """
 from __future__ import annotations
 
@@ -52,6 +57,12 @@ def main(argv=None):
                     choices=("sequential", "fused"),
                     help="communication backend: event-ordered scan "
                          "(paper) or fused batched sync")
+    ap.add_argument("--placement", default="single",
+                    choices=("single", "sharded"),
+                    help="worker placement: simulate all k workers on one "
+                         "device, or shard_map the worker axis over the "
+                         "mesh's 'pod' axis (requires --comm-mode fused; "
+                         "k must divide over the device count)")
     ap.add_argument("--elastic", action="store_true", default=True)
     ap.add_argument("--plain", dest="elastic", action="store_false")
     ap.add_argument("--seed", type=int, default=0)
@@ -66,6 +77,7 @@ def main(argv=None):
         num_workers=args.workers, tau=args.tau, alpha=args.alpha,
         overlap_ratio=args.overlap, failure_prob=args.failure_prob,
         dynamic=not args.no_dynamic, comm_mode=args.comm_mode,
+        placement=args.placement,
         failure_scenario=args.failure_scenario)
     spec = RunSpec(
         arch=args.arch, smoke=args.smoke,

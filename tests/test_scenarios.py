@@ -387,7 +387,12 @@ def test_round_step_accepts_scenario_masks():
 
 def test_round_chunk_scans_stacked_inputs():
     """round_chunk over stacked (R, ...) inputs is bit-identical to R
-    round_step calls (the jit-scanned multi-round core of ISSUE-3)."""
+    round_step calls (the jit-scanned multi-round core of ISSUE-3).
+
+    Both paths donate their state buffers (ISSUE-4: no double-buffering of
+    the (k × params) worker state), so this equality also asserts donation
+    changes no results; the two runs start from independently-initialized
+    (bit-identical) states because a donated state must not be reused."""
     tr = _trainer(k=2, tau=2)
     R = 3
     rng = np.random.default_rng(0)
@@ -399,7 +404,7 @@ def test_round_chunk_scans_stacked_inputs():
     restart = jnp.asarray(rng.random((R, 2)) < 0.3)
 
     state = tr.init_state(jax.random.key(0))
-    want = state
+    want = tr.init_state(jax.random.key(0))
     for r in range(R):
         want, wm = tr.round_step(want, RoundInputs(
             batches={k: v[r] for k, v in batches.items()}, rng=keys[r],
