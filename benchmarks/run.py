@@ -5,7 +5,9 @@ JSON record comparing per-round vs jit-chunked session wall time, and
 ``--what placement`` a JSON record comparing single vs sharded placement
 per-round time at k ∈ {4, 8} (force a multi-device host with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the worker
-shards actually spread)."""
+shards actually spread), and ``--what membership`` a JSON record measuring
+the capacity-padding overhead of the elastic worker pool (k ∈ {4, 8} live
+workers at capacity ∈ {8, 16} vs an exact-fit pool)."""
 import argparse
 import json
 
@@ -14,7 +16,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--what", default="all",
                     choices=["all", "kernels", "comm_modes", "paper",
-                             "roofline", "session", "placement"])
+                             "roofline", "session", "placement",
+                             "membership"])
     args = ap.parse_args(argv)
 
     if args.what == "session":
@@ -27,6 +30,12 @@ def main(argv=None) -> None:
         from benchmarks import session_bench
 
         print(json.dumps(session_bench.bench_session_placement()))
+        return
+
+    if args.what == "membership":
+        from benchmarks import session_bench
+
+        print(json.dumps(session_bench.bench_session_membership()))
         return
 
     from benchmarks import (kernels_bench, paper_figs, roofline_bench,

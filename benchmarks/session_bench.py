@@ -7,7 +7,7 @@ round. Compilation is excluded by warming each session up over its first
 chunk(s) before the timed window; each setting reuses one session (the jit
 cache keys on the trainer instance, so a fresh session would recompile).
 
-Two axes:
+Three axes:
 
 - ``bench_session()`` — ``rounds_per_call=1`` vs jit-scanned chunks
   (``--what session``).
@@ -18,6 +18,13 @@ Two axes:
   sharded numbers measure pure shard_map overhead. Emulated CPU devices
   share the same cores, so this records dispatch/collective overhead, not
   a hardware speedup.
+- ``bench_session_membership()`` — the price of capacity padding
+  (``--what membership``): per-round time with k live workers in an
+  exact-fit pool (capacity == k, the masking-free fixed-k trace) vs the
+  same k live workers rattling around capacity ∈ {8, 16} padded pools
+  (vacant slots are computed-then-masked in the local phase, frozen in
+  comm). The overhead ratio is what a deployment pays for being able to
+  scale up to capacity with zero recompiles.
 
 Each returns a JSON-able record; ``bench()`` adapts the chunking record to
 the CSV section format of the main harness.
@@ -94,6 +101,44 @@ def bench_session_placement(rounds=6, ks=(4, 8)):
         record[f"k{k}_single_over_sharded"] = round(
             record[f"k{k}_single_ms_per_round"]
             / record[f"k{k}_sharded_ms_per_round"], 3)
+    return record
+
+
+def bench_session_membership(rounds=6, ks=(4, 8), capacities=(8, 16)):
+    """Capacity-padding overhead: k live workers at capacity == k (exact
+    fit, no masking) vs the same k live workers in a padded pool.
+
+    One session per (k, capacity); capacities < k are skipped. The padded
+    sessions run the static membership scenario — the mask stream exists,
+    so this times the *whole* membership tax: mask slicing on the host,
+    select/freeze ops in the graph, and the dead compute of vacant slots.
+    """
+    from repro.api import ElasticSession, RunSpec
+    from repro.configs.base import ElasticConfig, OptimizerConfig
+
+    record = {"what": "session_membership", "arch": "paper-cnn", "tau": 1,
+              "batch_size": 8, "rounds_timed": rounds, "workers": list(ks),
+              "capacities": list(capacities)}
+    for k in ks:
+        for cap in (k,) + tuple(c for c in capacities if c > k):
+            spec = RunSpec(
+                arch="paper-cnn",
+                optimizer=OptimizerConfig(name="sgd", lr=0.01),
+                elastic=ElasticConfig(num_workers=k,
+                                      capacity=0 if cap == k else cap,
+                                      tau=1, dynamic=True),
+                rounds=1 + rounds, seed=0, batch_size=8,
+                n_data=512, n_test=64)
+            sess = ElasticSession(spec)
+            sess.run(1)  # compile + first-touch outside the timed window
+            t0 = time.perf_counter()
+            sess.run(rounds)
+            ms = (time.perf_counter() - t0) / rounds * 1e3
+            label = "exact" if cap == k else f"cap{cap}"
+            record[f"k{k}_{label}_ms_per_round"] = round(ms, 3)
+            if cap != k:
+                record[f"k{k}_cap{cap}_overhead"] = round(
+                    ms / record[f"k{k}_exact_ms_per_round"], 3)
     return record
 
 

@@ -34,6 +34,19 @@ master reduction per round, bit-exact with single-device fused mode
 (``tests/test_placement.py``). Records, eval and checkpointing are
 placement-agnostic: the master is replicated, so everything host-side reads
 identically.
+
+Elastic membership (ISSUE-5): with ``ElasticConfig.capacity > num_workers``
+(or any non-static ``membership_scenario``) the worker axis is
+capacity-padded and a per-round active mask rides through ``RoundInputs``.
+The session owns the membership lifecycle: it snaps chunk boundaries to
+membership-transition rounds (so the host can re-partition the data over
+the new pool — the shared overlap O is k-independent and stays put), feeds
+join masks so the coordinator re-seats joining slots from the master, and
+echoes the live mask in every :class:`RoundRecord`. ``resize()`` /
+``set_membership()`` change the pool live between ``run`` calls, and
+``restore()`` warm-starts a session — possibly at a *different* capacity —
+from a checkpoint's master, re-seating the saved live slots' u-histories
+and cold-starting any extra joiners from the master, EASGD-style.
 """
 from __future__ import annotations
 
@@ -48,7 +61,8 @@ from repro.checkpoint import checkpoint
 from repro.configs.base import (ElasticConfig, ModelConfig, OptimizerConfig,
                                 get_config)
 from repro.core.coordinator import ElasticTrainer, RoundInputs
-from repro.core.scenarios import ScenarioSchedule, make_scenario
+from repro.core.scenarios import (ScenarioSchedule, make_membership,
+                                  make_scenario)
 from repro.data.pipeline import TokenWorkerBatcher, WorkerBatcher
 from repro.data.synthetic import SyntheticImages, SyntheticTokens
 from repro.models.registry import build_model
@@ -110,11 +124,11 @@ class RunSpec:
             if self.plain:
                 raise ValueError(
                     "RunSpec: plain mode has no failure schedule")
-            want = (self.rounds, self.elastic.num_workers)
+            want = (self.rounds, self.elastic.cap)
             if self.schedule.fail.shape != want:
                 raise ValueError(
                     f"RunSpec.schedule shape {self.schedule.fail.shape} != "
-                    f"(rounds, num_workers) = {want}")
+                    f"(rounds, capacity) = {want}")
 
     def replace(self, **kw) -> "RunSpec":
         return dataclasses.replace(self, **kw)
@@ -124,11 +138,13 @@ class RunSpec:
 class RoundRecord:
     """One communication round, materialized on the host.
 
-    ``u``/``score``/``h1``/``h2`` are the (k,) dynamic-weighting diagnostics
-    (zeros in plain mode); ``fail``/``straggle``/``restart`` echo the
-    schedule row that drove the round. ``eval_loss``/``eval_acc`` are the
-    master's held-out metrics, populated only on eval rounds (``eval_acc``
-    only for model families that define ``accuracy``).
+    ``u``/``score``/``h1``/``h2`` are the (cap,) dynamic-weighting
+    diagnostics (zeros in plain mode and for vacant slots);
+    ``fail``/``straggle``/``restart`` echo the schedule row that drove the
+    round and ``active`` the live-membership mask (all-True for fixed-k
+    runs). ``eval_loss``/``eval_acc`` are the master's held-out metrics,
+    populated only on eval rounds (``eval_acc`` only for model families
+    that define ``accuracy``).
     """
 
     round: int
@@ -142,6 +158,11 @@ class RoundRecord:
     restart: np.ndarray
     eval_loss: Optional[float] = None
     eval_acc: Optional[float] = None
+    active: Optional[np.ndarray] = None
+
+    @property
+    def num_active(self) -> int:
+        return int(self.active.sum()) if self.active is not None else 0
 
 
 class ElasticSession:
@@ -170,11 +191,13 @@ class ElasticSession:
         self.model = build_model(cfg)
         ecfg = spec.elastic
         if spec.plain:
-            # the k=1 limit has no worker axis to place
-            ecfg = dataclasses.replace(ecfg, num_workers=1, tau=1,
-                                       overlap_ratio=0.0, failure_prob=0.0,
-                                       placement="single")
+            # the k=1 limit has no worker axis to place (and no pool)
+            ecfg = dataclasses.replace(ecfg, num_workers=1, capacity=0,
+                                       tau=1, overlap_ratio=0.0,
+                                       failure_prob=0.0, placement="single",
+                                       membership_scenario="static")
         self.ecfg = ecfg
+        self.capacity = ecfg.cap
         self._sharded = ecfg.placement == "sharded"
         if not self._sharded and mesh is not None:
             raise ValueError(
@@ -213,9 +236,12 @@ class ElasticSession:
                 np.random.default_rng(spec.seed + 31), spec.batch_size,
                 spec.seq_len).items()}
         # -- schedule -------------------------------------------------------
+        self._active = np.arange(self.capacity) < ecfg.num_workers
         if spec.plain:
             self.schedule = None
             self._failed_recent = None
+            self._membership = None
+            self._join_rows = None
         else:
             if spec.schedule is not None:
                 self.schedule = spec.schedule
@@ -223,8 +249,16 @@ class ElasticSession:
                 sseed = (spec.scenario_seed if spec.scenario_seed is not None
                          else spec.seed + 7)
                 self.schedule = make_scenario(ecfg).schedule(
-                    sseed, spec.rounds, ecfg.num_workers)
+                    sseed, spec.rounds, self.capacity)
+            if self.schedule.active is None and (
+                    self.capacity > ecfg.num_workers
+                    or ecfg.membership_scenario != "static"):
+                # membership stream: planned resize events at capacity
+                self.schedule = self.schedule.with_membership(
+                    make_membership(ecfg).active_schedule(
+                        spec.rounds, self.capacity, ecfg.num_workers))
             self._failed_recent = self.schedule.failed_recent_all()
+            self._refresh_membership()
         # -- state ----------------------------------------------------------
         if spec.plain:
             self.state = init_train_state(self.model, spec.optimizer,
@@ -237,6 +271,10 @@ class ElasticSession:
             self.state = self.trainer.init_state(jax.random.key(spec.seed))
             if self._sharded:
                 self.state = self._place_state(self.state)
+        if not spec.plain and self.schedule.has_membership:
+            # seat round 0's membership (a custom schedule or a plan step
+            # at round 0 may start with a different pool than num_workers)
+            self._apply_membership(self.schedule.active[0])
         self._rng_base = jax.random.key(spec.seed)
         self._eval_loss = jax.jit(lambda p, b: self.model.loss(p, b)[0])
         self._eval_acc = (jax.jit(self.model.accuracy)
@@ -257,6 +295,81 @@ class ElasticSession:
                     lambda x, s=specs[key]: jax.device_put(
                         x, NamedSharding(self.mesh, s)), sub)
                 for key, sub in state.items()}
+
+    # -- membership ----------------------------------------------------------
+    def _refresh_membership(self):
+        """Re-derive the per-round membership/join input rows from the
+        schedule. Join rows stay ``None`` when no slot ever flips
+        inactive→active, preserving the specialized no-join trace."""
+        self._membership = self.schedule.active
+        joins = self.schedule.joins()
+        self._join_rows = joins if joins.any() else None
+
+    def _apply_membership(self, row: np.ndarray):
+        """Host-side membership transition: remember the live mask and
+        re-partition the data over the new pool (O stays put; only the
+        unique shards are redealt)."""
+        if np.array_equal(row, self._active):
+            return
+        self._active = row.copy()
+        self.batcher.set_active_mask(row)
+
+    @property
+    def active_mask(self) -> np.ndarray:
+        """(cap,) bool — the live-membership mask as of the next round."""
+        return self._active.copy()
+
+    @property
+    def num_active(self) -> int:
+        return int(self._active.sum())
+
+    def set_membership(self, mask) -> None:
+        """Live membership change between ``run`` calls: the given (cap,)
+        bool mask becomes the pool for every remaining round (overriding
+        the scheduled stream from here on). Newly activated slots join at
+        the next round, cold-started from the master. With a fixed-k spec
+        (no membership stream) the first call materializes one, which
+        retraces the jitted round once — capacity-padded specs
+        (``capacity > num_workers`` or a membership scenario) pay nothing.
+        """
+        if self.spec.plain:
+            raise ValueError("plain mode has no worker pool to resize")
+        mask = np.asarray(mask, bool)
+        if mask.shape != (self.capacity,):
+            raise ValueError(
+                f"membership mask shape {mask.shape} != ({self.capacity},)")
+        if not mask.any():
+            raise ValueError("at least one worker must stay active")
+        if self.round >= self.spec.rounds:
+            raise ValueError("run already complete; nothing left to resize")
+        rows = self.schedule.active
+        if rows is None:
+            rows = np.arange(self.capacity)[None] < self.ecfg.num_workers
+            rows = np.repeat(rows, self.spec.rounds, axis=0)
+            rows[:self.round] = self._active  # frozen history
+        rows = rows.copy()
+        rows[self.round:] = mask
+        self.schedule = self.schedule.with_membership(rows)
+        self._refresh_membership()
+        self._apply_membership(mask)
+
+    def resize(self, k: int) -> None:
+        """Live pool resize to ``k`` workers: growing activates the
+        lowest-numbered vacant slots (joiners, cold-started from the
+        master); shrinking retires the highest-numbered live slots."""
+        if self.spec.plain:
+            raise ValueError("plain mode has no worker pool to resize")
+        if not 1 <= k <= self.capacity:
+            raise ValueError(
+                f"resize target {k} outside 1..capacity={self.capacity}")
+        mask = self._active.copy()
+        live = np.flatnonzero(mask)
+        if k > len(live):
+            vacant = np.flatnonzero(~mask)
+            mask[vacant[:k - len(live)]] = True
+        elif k < len(live):
+            mask[live[k:]] = False
+        self.set_membership(mask)
 
     # -- eval ---------------------------------------------------------------
     @property
@@ -282,16 +395,64 @@ class ElasticSession:
              extra_metadata: Optional[dict] = None) -> str:
         """Save the master params with unified metadata. Every session
         checkpoint — plain or elastic, any entrypoint — records at least
-        ``{"rounds", "arch", "scenario"}``."""
+        ``{"rounds", "arch", "scenario"}``; elastic checkpoints add the
+        per-slot membership manifest (capacity, active mask, u-history)
+        that ``restore`` re-seats — possibly into a different capacity."""
         path = path or self.spec.save_path
         if not path:
             raise ValueError("no save path: pass one or set RunSpec.save_path")
         meta = {"rounds": self.round, "arch": self.model_cfg.name,
                 "scenario": ("none" if self.spec.plain
                              else self.ecfg.failure_scenario)}
+        if not self.spec.plain:
+            meta["elastic"] = checkpoint.elastic_manifest(
+                self._active, np.asarray(self.state["u_hist"], np.float32))
         meta.update(extra_metadata or {})
         checkpoint.save(path, self.master_params, metadata=meta)
         return path
+
+    def restore(self, path: str) -> dict:
+        """Warm-start this session from a saved checkpoint; returns its
+        metadata. The master is restored exactly; every worker slot is
+        cold-started *from the master* (EASGD-style — per-worker params are
+        not checkpointed, and a restore is a pool-wide rejoin) with fresh
+        optimizer accumulators. The checkpoint's live slots are re-seated
+        into this session's active slots in order, carrying their
+        u-histories across even when the two capacities differ; any extra
+        active slots here are joiners with blank histories. Raises on an
+        architecture mismatch between the manifest and this session's spec.
+        """
+        from repro.nn.param import abstract_tree
+
+        arch = checkpoint.read_metadata(path).get("arch")
+        if arch is not None and arch != self.model_cfg.name:
+            raise ValueError(
+                f"checkpoint {path!r} was saved from arch {arch!r}, this "
+                f"session runs {self.model_cfg.name!r}")
+        if self.spec.plain:
+            tree, meta = checkpoint.restore(path, like=self.state["params"])
+            self.state = dict(self.state, params=tree)
+            return meta
+        # the master lives (and was saved) in float32 — restore it at f32 so
+        # it comes back bit-exact even when the model's param dtype is
+        # narrower (bf16 transformers); workers re-seat at param dtype, as
+        # a fresh run's workers would be
+        spec_tree = abstract_tree(self.model.spec)
+        like32 = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), spec_tree)
+        master, meta = checkpoint.restore(path, like=like32)
+        params = jax.tree.map(lambda m, s: m.astype(s.dtype), master,
+                              spec_tree)
+        u_hist = checkpoint.reseat_u_hist(
+            meta.get("elastic"), self.capacity, self._active,
+            self.ecfg.score_window)
+        state = self.trainer.init_state(jax.random.key(self.spec.seed),
+                                        params=params)
+        state["master"] = master
+        state["master_prev"] = jax.tree.map(jnp.copy, master)
+        state["u_hist"] = jnp.asarray(u_hist)
+        self.state = self._place_state(state) if self._sharded else state
+        return meta
 
     # -- execution ----------------------------------------------------------
     def _round_rng(self, r: int) -> jax.Array:
@@ -299,13 +460,23 @@ class ElasticSession:
 
     def _next_chunk(self, end: int) -> int:
         """Rounds to run in the next jit call: at most ``rounds_per_call``,
-        never past ``end``, and never past the next eval round (evals read
-        the master between chunks, so eval rounds must close a chunk)."""
+        never past ``end``, never past the next eval round (evals read the
+        master between chunks, so eval rounds must close a chunk), and
+        never across a membership transition (the host re-partitions the
+        data over the new pool between chunks, so a transition round must
+        open a fresh chunk — this re-snap composes with the eval snapping,
+        and the eval cadence itself never moves)."""
         n = min(self.spec.rounds_per_call, end - self.round)
         if self.spec.eval_every > 0:
             for r in range(self.round, self.round + n):
                 if self._is_eval_round(r):
                     n = r - self.round + 1
+                    break
+        if self._membership is not None:
+            row = self._membership[self.round]
+            for r in range(self.round + 1, self.round + n):
+                if not np.array_equal(self._membership[r], row):
+                    n = r - self.round
                     break
         return n
 
@@ -317,12 +488,19 @@ class ElasticSession:
     def _run_chunk_elastic(self, n: int) -> List[RoundRecord]:
         lo, hi = self.round, self.round + n
         sched = self.schedule
+        if self._membership is not None:
+            # membership is chunk-constant (_next_chunk snaps transitions);
+            # re-partition the data before building this chunk's batches
+            self._apply_membership(self._membership[lo])
         stacked = self._stack_batches(n)
         rngs = [self._round_rng(r) for r in range(lo, hi)]
         # specialization on whole-schedule has_* keeps one trace per run
         # even when an individual chunk happens to be event-free
         straggle = sched.straggle[lo:hi] if sched.has_stragglers else None
         restart = sched.restart[lo:hi] if sched.has_restarts else None
+        active = (self._membership[lo:hi] if self._membership is not None
+                  else None)
+        join = self._join_rows[lo:hi] if self._join_rows is not None else None
         if n == 1:
             inputs = RoundInputs(
                 batches={k: jnp.asarray(v[0]) for k, v in stacked.items()},
@@ -331,7 +509,9 @@ class ElasticSession:
                 failed_recent=jnp.asarray(self._failed_recent[lo]),
                 straggle=None if straggle is None
                 else jnp.asarray(straggle[0]),
-                restart=None if restart is None else jnp.asarray(restart[0]))
+                restart=None if restart is None else jnp.asarray(restart[0]),
+                active=None if active is None else jnp.asarray(active[0]),
+                join=None if join is None else jnp.asarray(join[0]))
             step = (self.trainer.round_step_sharded if self._sharded
                     else self.trainer.round_step)
             self.state, m = step(self.state, inputs)
@@ -343,7 +523,9 @@ class ElasticSession:
                 fail=jnp.asarray(sched.fail[lo:hi]),
                 failed_recent=jnp.asarray(self._failed_recent[lo:hi]),
                 straggle=None if straggle is None else jnp.asarray(straggle),
-                restart=None if restart is None else jnp.asarray(restart))
+                restart=None if restart is None else jnp.asarray(restart),
+                active=None if active is None else jnp.asarray(active),
+                join=None if join is None else jnp.asarray(join))
             chunk = (self.trainer.round_chunk_sharded if self._sharded
                      else self.trainer.round_chunk)
             self.state, m = chunk(self.state, inputs)
@@ -360,7 +542,9 @@ class ElasticSession:
                 h1=m["h1"][i], h2=m["h2"][i],
                 fail=sched.fail[r], straggle=sched.straggle[r],
                 restart=sched.restart[r],
-                eval_loss=ev_loss, eval_acc=ev_acc))
+                eval_loss=ev_loss, eval_acc=ev_acc,
+                active=(self._membership[r] if self._membership is not None
+                        else np.ones(self.capacity, bool))))
         return records
 
     def _run_chunk_plain(self, n: int) -> List[RoundRecord]:
@@ -382,7 +566,7 @@ class ElasticSession:
             records.append(RoundRecord(
                 round=r, loss=float(loss[i]), u=z, score=z, h1=z, h2=z,
                 fail=zb, straggle=zb, restart=zb,
-                eval_loss=ev_loss, eval_acc=ev_acc))
+                eval_loss=ev_loss, eval_acc=ev_acc, active=~zb))
         return records
 
     def run_iter(self, rounds: Optional[int] = None

@@ -1,16 +1,26 @@
 """Checkpointing: npz-sharded save/restore for parameter/optimizer pytrees.
 
 No orbax dependency — flat key/value npz files plus a JSON manifest holding
-the tree structure, dtypes and (optionally) elastic-coordinator metadata
-(round index, u-history). Large leaves are chunked across multiple npz
-shards to bound file size; restore is lazy per shard.
+the tree structure, dtypes and (optionally) elastic-coordinator metadata.
+Shards are bounded at ``MAX_SHARD_BYTES``: leaves are packed until a shard
+fills, and a single leaf larger than the bound is *split* into flat chunks
+spread across consecutive shards (manifest ``parts`` entries), so no one
+npz file exceeds the bound by more than one chunk; restore reassembles
+parts and is lazy per shard.
+
+Elastic-membership manifests (ISSUE-5): :func:`elastic_manifest` records
+the worker pool's per-slot active mask and u-history next to the master
+params, and :func:`reseat_u_hist` re-seats those histories into a pool of
+a *different* capacity — live slots carry their histories across in order,
+new slots cold-start blank (their params come from the master, EASGD
+style). ``ElasticSession.save`` / ``restore`` drive both.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +28,7 @@ import numpy as np
 
 _SEP = "/"
 MAX_SHARD_BYTES = 1 << 30  # 1 GiB per npz shard
+U_HIST_FILL = -30.0  # blank u-history entry (matches ElasticTrainer.init_state)
 
 
 def _flatten_with_paths(tree) -> Dict[str, Any]:
@@ -48,30 +59,52 @@ def _to_numpy(x):
     return a
 
 
+def _leaf_parts(arr: np.ndarray) -> List[np.ndarray]:
+    """Split a leaf bigger than ``MAX_SHARD_BYTES`` into flat chunks (each
+    at most one shard's worth); smaller leaves pass through whole."""
+    if arr.nbytes <= MAX_SHARD_BYTES:
+        return [arr]
+    per = max(1, MAX_SHARD_BYTES // max(arr.itemsize, 1))
+    flat = arr.reshape(-1)
+    return [flat[i:i + per] for i in range(0, flat.size, per)]
+
+
 def save(path: str, tree, *, metadata: Optional[dict] = None) -> None:
     os.makedirs(path, exist_ok=True)
     orig_dtypes = {k: str(np.asarray(v).dtype)
                    for k, v in _flatten_with_paths(tree).items()}
     flat = _flatten_with_paths(jax.tree.map(_to_numpy, tree))
-    shards, cur, cur_bytes = [], {}, 0
-    for key, arr in flat.items():
+    keys_info: Dict[str, dict] = {}
+    shards: List[dict] = []
+    cur, cur_bytes = {}, 0
+
+    def place(npz_key, arr):
+        nonlocal cur, cur_bytes
         if cur_bytes + arr.nbytes > MAX_SHARD_BYTES and cur:
             shards.append(cur)
             cur, cur_bytes = {}, 0
-        cur[key] = arr
+        cur[npz_key] = arr
         cur_bytes += arr.nbytes
+        return len(shards)  # index this npz_key will land in
+
+    for key, arr in flat.items():
+        parts = _leaf_parts(arr)
+        info = {"dtype": orig_dtypes[key], "shape": list(arr.shape)}
+        if len(parts) == 1:
+            info["shard"] = place(_sanitize(key), arr)
+        else:  # oversized leaf: flat chunks across consecutive shards
+            info["parts"] = [place(f"{_sanitize(key)}#p{j}", p)
+                             for j, p in enumerate(parts)]
+        keys_info[key] = info
     if cur:
         shards.append(cur)
     manifest = {
         "num_shards": len(shards),
-        "keys": {k: {"shard": i, "dtype": orig_dtypes[k],
-                     "shape": list(v.shape)}
-                 for i, shard in enumerate(shards) for k, v in shard.items()},
+        "keys": keys_info,
         "metadata": metadata or {},
     }
     for i, shard in enumerate(shards):
-        np.savez(os.path.join(path, f"shard_{i:05d}.npz"),
-                 **{_sanitize(k): v for k, v in shard.items()})
+        np.savez(os.path.join(path, f"shard_{i:05d}.npz"), **shard)
     with open(os.path.join(path, "manifest.json"), "w") as f:
         json.dump(manifest, f)
 
@@ -80,29 +113,97 @@ def _sanitize(key: str) -> str:
     return key.replace(_SEP, "__")
 
 
+def read_metadata(path: str) -> dict:
+    """The checkpoint's metadata alone — no shard I/O. Lets callers check
+    compatibility (arch, capacity) before paying for a full restore."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["metadata"]
+
+
 def restore(path: str, like=None):
-    """Restore; if ``like`` given, unflatten into its treedef and dtypes."""
+    """Restore; if ``like`` given, unflatten into its treedef and dtypes.
+    Leaves that were split across shards (manifest ``parts``) are
+    reassembled transparently."""
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    flat: Dict[str, np.ndarray] = {}
+    # shard index → [(npz key, manifest key, part index | None)]
     by_shard: Dict[int, list] = {}
+    parts: Dict[str, list] = {}
     for k, info in manifest["keys"].items():
-        by_shard.setdefault(info["shard"], []).append(k)
-    for i, keys in by_shard.items():
+        if "parts" in info:
+            parts[k] = [None] * len(info["parts"])
+            for j, s in enumerate(info["parts"]):
+                by_shard.setdefault(s, []).append(
+                    (f"{_sanitize(k)}#p{j}", k, j))
+        else:
+            by_shard.setdefault(info["shard"], []).append(
+                (_sanitize(k), k, None))
+
+    def cast(arr, key):
+        want = manifest["keys"][key]["dtype"]
+        if str(arr.dtype) != want:
+            arr = np.asarray(jnp.asarray(arr).astype(want))
+        return arr
+
+    flat: Dict[str, np.ndarray] = {}
+    for i, entries in by_shard.items():
         with np.load(os.path.join(path, f"shard_{i:05d}.npz")) as z:
-            for k in keys:
-                arr = z[_sanitize(k)]
-                want = manifest["keys"][k]["dtype"]
-                if str(arr.dtype) != want:
-                    arr = np.asarray(jnp.asarray(arr).astype(want))
-                flat[k] = arr
+            for npz_key, k, j in entries:
+                if j is None:
+                    flat[k] = cast(z[npz_key], k)
+                else:
+                    parts[k][j] = z[npz_key]
+    for k, chunks in parts.items():
+        whole = np.concatenate(chunks).reshape(manifest["keys"][k]["shape"])
+        flat[k] = cast(whole, k)
     if like is None:
         return _unflatten_paths(flat), manifest["metadata"]
-    leaves, treedef = jax.tree.flatten(like)
-    paths = sorted(_flatten_with_paths(like).keys())
     flat_like = _flatten_with_paths(like)
     out = {p: jnp.asarray(flat[p], flat_like[p].dtype) for p in flat_like}
     return _unflatten_into(like, out), manifest["metadata"]
+
+
+# ---------------------------------------------------------------------------
+# elastic worker-pool membership manifests (ISSUE-5)
+# ---------------------------------------------------------------------------
+
+def elastic_manifest(active, u_hist) -> dict:
+    """JSON-able per-slot membership record stored in checkpoint metadata:
+    capacity, the live mask, and each slot's u-history window (what a
+    restore re-seats; worker params are deliberately *not* stored — a
+    restore is a pool-wide rejoin from the master)."""
+    active = np.asarray(active, bool)
+    u_hist = np.asarray(u_hist, np.float32)
+    assert u_hist.shape[0] == active.shape[0]
+    return {"capacity": int(active.shape[0]),
+            "active": active.astype(int).tolist(),
+            "u_hist": [[float(v) for v in row] for row in u_hist]}
+
+
+def reseat_u_hist(elastic_meta: Optional[dict], capacity: int, active_now,
+                  window: int, fill: float = U_HIST_FILL) -> np.ndarray:
+    """Re-seat a checkpoint's per-slot u-histories into a pool of (possibly
+    different) ``capacity``: the checkpoint's live slots map onto the
+    currently active slots in order, carrying their histories across; any
+    remaining slots — joiners, vacancies, overflow when the new pool is
+    smaller — get blank (``fill``) histories. History windows are aligned
+    on the newest entries when the score window changed. Returns the
+    (capacity, window) float32 u-history for ``ElasticTrainer`` state."""
+    out = np.full((capacity, window), fill, np.float32)
+    if not elastic_meta:
+        return out
+    saved_active = np.asarray(elastic_meta.get("active", ()), bool)
+    saved_hist = np.asarray(elastic_meta.get("u_hist", ()), np.float32)
+    if saved_hist.ndim != 2 or saved_active.size != saved_hist.shape[0]:
+        return out
+    live = saved_hist[saved_active]
+    # align windows on the newest (rightmost) entries
+    w = min(window, live.shape[1]) if live.size else 0
+    targets = np.flatnonzero(np.asarray(active_now, bool))
+    m = min(len(live), len(targets))
+    if m and w:
+        out[targets[:m], window - w:] = live[:m, live.shape[1] - w:]
+    return out
 
 
 def _unflatten_paths(flat: Dict[str, np.ndarray]):

@@ -125,12 +125,24 @@ INPUT_SHAPES = {
 FAILURE_SCENARIOS = ("iid", "burst", "correlated", "straggler",
                      "crash_restart")
 
+# Membership scenario catalogue (planned worker-pool resize streams; the
+# generators live next to the failure scenarios in repro/core/scenarios.py).
+MEMBERSHIP_SCENARIOS = ("static", "scale_up", "scale_down",
+                        "preempt_rejoin", "plan")
+
 
 @dataclasses.dataclass(frozen=True)
 class ElasticConfig:
     """Paper Section V hyper-parameters."""
 
     num_workers: int = 4
+    # Worker-pool capacity (ISSUE-5). Every device-side worker-axis array is
+    # sized at `cap` slots and an active mask selects the live ones, so
+    # membership (join/leave/resize) can change between chunks with zero
+    # recompiles — shapes are fixed at capacity. 0 means "exactly
+    # num_workers" (the pre-elastic fixed-k regime, masking-free when the
+    # membership scenario is static).
+    capacity: int = 0
     tau: int = 1                      # communication period
     alpha: float = 0.1                # EASGD moving rate (best grid value, §VII)
     score_window: int = 5             # p most-recent u values kept (p-1 diffs)
@@ -164,6 +176,22 @@ class ElasticConfig:
     fault_groups: int = 2             # correlated: number of co-failing racks
     crash_downtime: int = 3           # crash_restart: rounds down per crash
     straggler_tau_scale: float = 0.5  # straggler: fraction of τ it completes
+    # Membership scenario engine (repro/core/scenarios.py): a planned
+    # (rounds, capacity) active-mask stream riding alongside the failure
+    # masks. "static" keeps the initial num_workers slots live; scale_up /
+    # scale_down resize the pool once at membership_round; preempt_rejoin
+    # takes membership_k workers out for crash_downtime rounds; "plan" runs
+    # the explicit (round, k) resize steps in membership_plan.
+    membership_scenario: str = "static"
+    membership_k: int = 0             # resize target / preempted count (0 = scenario default)
+    membership_round: int = 0         # when the membership event fires (0 = rounds//2)
+    membership_plan: Tuple[Tuple[int, int], ...] = ()  # "plan": (round, k) steps
+
+    @property
+    def cap(self) -> int:
+        """Padded worker-axis length: ``capacity`` slots (>= num_workers),
+        or exactly ``num_workers`` when capacity is left at 0."""
+        return self.capacity or self.num_workers
 
     def __post_init__(self):
         if self.comm_mode not in ("sequential", "fused"):
@@ -183,6 +211,28 @@ class ElasticConfig:
             raise ValueError(
                 f"failure_scenario must be one of {FAILURE_SCENARIOS}, "
                 f"got {self.failure_scenario!r}")
+        if self.num_workers < 1:
+            raise ValueError(
+                f"num_workers must be >= 1, got {self.num_workers}")
+        if self.capacity and self.capacity < self.num_workers:
+            raise ValueError(
+                f"capacity={self.capacity} must be >= "
+                f"num_workers={self.num_workers} (capacity pads the worker "
+                "axis; it cannot truncate the initial membership)")
+        if self.membership_scenario not in MEMBERSHIP_SCENARIOS:
+            raise ValueError(
+                f"membership_scenario must be one of {MEMBERSHIP_SCENARIOS},"
+                f" got {self.membership_scenario!r}")
+        if self.membership_scenario == "plan" and not self.membership_plan:
+            raise ValueError(
+                "membership_scenario='plan' needs a non-empty "
+                "membership_plan of (round, k) steps")
+        for step in self.membership_plan:
+            r, k = step
+            if r < 0 or not 1 <= k <= self.cap:
+                raise ValueError(
+                    f"membership_plan step {step}: need round >= 0 and "
+                    f"1 <= k <= capacity ({self.cap})")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -51,6 +51,19 @@ Placement (``ecfg.placement``) picks where the k workers live:
 Both placements run the same ``_round`` body; the sharded path threads the
 mesh axis name through the local/comm phases, which switch their few
 cross-worker reductions (mean loss, master reduction) to collectives.
+
+Elastic membership (ISSUE-5): the worker axis is sized at
+``ecfg.cap >= num_workers`` *slots* and an optional per-round ``active``
+mask in :class:`RoundInputs` selects the live ones. Inactive slots are
+frozen end to end — no local steps, no history push, no elastic exchange,
+no loss contribution — so membership (join / leave / resize) can change
+between rounds with zero recompiles: every shape is fixed at capacity.
+Slots joining this round arrive in the ``join`` mask and are re-seated
+from the master (EASGD cold start) exactly like a crash-restart rejoin.
+When ``active``/``join`` are ``None`` (a fixed-k run), the traced round is
+literally the pre-capacity graph — masking costs nothing and the
+all-active path is bit-exact with it by construction (``jnp.where`` /
+logical masking with an all-True mask is an elementwise identity).
 """
 from __future__ import annotations
 
@@ -78,6 +91,15 @@ def tree_stack_copies(tree, k: int):
 POD_AXIS = "pod"
 
 
+def padded_capacity(capacity: int, n_pod: int) -> int:
+    """Smallest multiple of ``n_pod`` >= ``capacity`` — sharded placement
+    partitions the slot axis evenly over the pod axis, so a capacity that
+    does not divide is padded up and the extra slots stay permanently
+    inactive (uneven-shard masking: shards may hold unequal numbers of
+    *live* workers, but equal numbers of slots)."""
+    return -(-capacity // n_pod) * n_pod
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class RoundInputs:
@@ -90,6 +112,10 @@ class RoundInputs:
     away entirely (single trace, no mask traffic). Keep the None-ness
     consistent across calls to avoid retraces.
 
+    All per-worker leaves are sized at the *slot capacity*
+    ``ElasticConfig.cap`` (written k below; k == num_workers unless the
+    pool is capacity-padded):
+
     - ``batches``: pytree with (τ, k, ...) leaves (or (R, τ, k, ...))
     - ``rng``: per-round PRNG key (or a stacked (R,) key array)
     - ``fail``: (k,) bool — communication suppressed this round
@@ -97,6 +123,12 @@ class RoundInputs:
       ``ScenarioSchedule.failed_recent``
     - ``straggle``: optional (k,) bool — reduced-τ slow workers
     - ``restart``: optional (k,) bool — crash-rejoin resets
+    - ``active``: optional (k,) bool — live-membership mask; ``None``
+      means every slot is live (the fixed-k fast path). Inactive slots
+      freeze entirely: no local steps, no sync, no history, no loss.
+    - ``join``: optional (k,) bool — slots (re)joining the pool this
+      round; their params are re-seated from the master before the local
+      phase (same cold-start op as a crash-restart rejoin).
     """
 
     batches: Any
@@ -105,6 +137,8 @@ class RoundInputs:
     failed_recent: jax.Array
     straggle: Optional[jax.Array] = None
     restart: Optional[jax.Array] = None
+    active: Optional[jax.Array] = None
+    join: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass(eq=False)  # hash by id → usable as a static jit arg
@@ -128,16 +162,21 @@ class ElasticTrainer:
                     f"sharded placement needs a {POD_AXIS!r} mesh axis, "
                     f"mesh has {tuple(self.mesh.shape)}")
             n_pod = self.mesh.shape[POD_AXIS]
-            if self.ecfg.num_workers % n_pod:
+            if self.ecfg.cap % n_pod:
                 raise ValueError(
-                    f"num_workers={self.ecfg.num_workers} must divide "
-                    f"evenly over the {n_pod}-way {POD_AXIS!r} mesh axis")
+                    f"worker capacity={self.ecfg.cap} must divide evenly "
+                    f"over the {n_pod}-way {POD_AXIS!r} mesh axis (pad it "
+                    f"with coordinator.padded_capacity and leave the extra "
+                    f"slots inactive)")
 
     # -- state ----------------------------------------------------------------
     def init_state(self, rng: jax.Array, params=None):
+        """All worker-axis entries are sized at ``ecfg.cap`` slots; slots
+        beyond the initial membership hold master copies until a join
+        re-seats them (they are frozen by the active mask regardless)."""
         from repro.nn.param import init_tree
 
-        k = self.ecfg.num_workers
+        k = self.ecfg.cap
         if params is None:
             params = init_tree(rng, self.model.spec)
         master = jax.tree.map(lambda x: x.astype(jnp.float32), params)
@@ -196,13 +235,19 @@ class ElasticTrainer:
         params = apply_updates(params, updates)
         return params, opt_state, loss
 
-    def local_phase(self, state, batches, rng, straggle=None, axis=None):
-        """batches: pytree with leading (τ, k, ...) axes.
+    def local_phase(self, state, batches, rng, straggle=None, active=None,
+                    axis=None):
+        """batches: pytree with leading (τ, k, ...) axes (k = slot capacity).
 
         ``straggle``: optional (k,) bool — straggling workers are slow, not
         dead: they complete only the first
         ``max(1, round(straggler_tau_scale·τ))`` local steps; params and
         optimizer state freeze for the rest of the phase.
+
+        ``active``: optional (k,) bool — live-membership mask. Inactive
+        slots freeze for the whole phase (params/optimizer unchanged) and
+        contribute neither loss nor active-count to the mean-loss metric,
+        so the metric averages over the live pool only.
 
         ``axis``: mesh axis name when running inside ``shard_map`` (sharded
         placement). The worker axis of every input then holds only this
@@ -215,7 +260,7 @@ class ElasticTrainer:
         re-associates the mean-loss reduction, which is why that metric —
         and only that metric — is last-ulp-tolerant across placements.)
         """
-        k = self.ecfg.num_workers
+        k = self.ecfg.cap
         tau = jax.tree.leaves(batches)[0].shape[0]
         k_loc = jax.tree.leaves(batches)[0].shape[1]
         tau_eff = max(1, round(self.ecfg.straggler_tau_scale * tau))
@@ -243,15 +288,21 @@ class ElasticTrainer:
             else:
                 new_p, new_o, loss = jax.vmap(self._one_step)(
                     params, opt_state, batch_t, rngs)
+            # frozen steps (slow stragglers past their reduced τ, inactive
+            # slots) contribute neither updates nor loss metrics
+            live = None
             if straggle is not None:
-                # frozen steps contribute neither updates nor loss metrics
-                active = jnp.logical_or(~straggle, t < tau_eff)
+                live = jnp.logical_or(~straggle, t < tau_eff)
+            if active is not None:
+                live = active if live is None else jnp.logical_and(live,
+                                                                   active)
+            if live is not None:
                 sel = lambda n, o: jnp.where(
-                    active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+                    live.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
                 new_p = jax.tree.map(sel, new_p, params)
                 new_o = jax.tree.map(sel, new_o, opt_state)
-                loss = jnp.where(active, loss, 0.0)
-                active_f = active
+                loss = jnp.where(live, loss, 0.0)
+                active_f = live
             else:
                 active_f = jnp.ones_like(loss, bool)
             return (new_p, new_o), (jnp.sum(loss), jnp.sum(active_f))
@@ -269,13 +320,20 @@ class ElasticTrainer:
 
     # -- communication phase -----------------------------------------------------
     def comm_phase(self, state, fail_mask, failed_recent=None, straggle=None,
-                   axis=None):
+                   active=None, axis=None):
         """fail_mask: (k,) bool — True suppresses this worker's sync.
 
         ``straggle``: optional (k,) bool — straggling workers score against
         the *previous* round's master snapshot (their estimate of the master
         is stale; the elastic exchange itself still uses the live master,
         which the parameter server holds).
+
+        ``active``: optional (k,) bool — live-membership mask. An inactive
+        slot is a vacancy, not a failure: it performs no elastic exchange
+        *and* its u-history stays frozen (a failed worker keeps training
+        locally and keeps scoring; a vacant slot has no worker at all). In
+        the sequential scan it is a no-op on the master, so the event order
+        of the live workers is identical to a pool that never had the slot.
 
         Dispatches on ``ecfg.comm_mode``: "sequential" is the paper's
         event-ordered scan; "fused" batches all k syncs into one scoring
@@ -288,15 +346,17 @@ class ElasticTrainer:
             failed_recent = jnp.zeros_like(fail_mask)
         if ecfg.comm_mode == "fused":
             return self._comm_phase_fused(state, fail_mask, failed_recent,
-                                          straggle, axis)
+                                          straggle, active, axis)
         if axis is not None:  # unreachable: ElasticConfig validates this
             raise ValueError("sequential comm cannot run sharded")
         stale_master = state.get("master_prev", state["master"])
         straggle_in = (jnp.zeros_like(fail_mask) if straggle is None
                        else straggle)
+        active_in = (jnp.ones_like(fail_mask) if active is None
+                     else active)
 
         def sync_one(master, xs):
-            w_i, hist_i, fail_i, fr_i, st_i = xs
+            w_i, hist_i, fail_i, fr_i, st_i, act_i = xs
             # u from the estimated master (other-worker estimate ≈ current
             # master in the event-ordered simulation)
             u_t = dw.log_distance(w_i, master)
@@ -304,11 +364,15 @@ class ElasticTrainer:
                 u_t = jnp.where(st_i, dw.log_distance(w_i, stale_master),
                                 u_t)
             hist_new = dw.push_history(hist_i, u_t)
+            if active is not None:
+                hist_new = jnp.where(act_i, hist_new, hist_i)
             a = dw.raw_score(hist_new, ecfg.score_weights)
             w1, w2 = dw.weights_for(ecfg, a, failed_recently=fr_i)
-            # suppressed communication: no elastic exchange at all
-            w1 = jnp.where(fail_i, 0.0, w1)
-            w2 = jnp.where(fail_i, 0.0, w2)
+            # suppressed communication (failure or vacancy): no exchange
+            dead_i = (fail_i if active is None
+                      else jnp.logical_or(fail_i, ~act_i))
+            w1 = jnp.where(dead_i, 0.0, w1)
+            w2 = jnp.where(dead_i, 0.0, w2)
             if self.use_pallas:
                 from repro.kernels.elastic.ops import elastic_update_pallas
 
@@ -317,12 +381,15 @@ class ElasticTrainer:
                     interpret=jax.default_backend() != "tpu")
             else:
                 new_w, new_master = elastic_update(w_i, master, w1, w2)
+            if active is not None:  # vacant slots report zeroed diagnostics
+                u_t = jnp.where(act_i, u_t, 0.0)
+                a = jnp.where(act_i, a, 0.0)
             return new_master, (new_w, hist_new, (u_t, a, w1, w2))
 
         master, (workers, hist, diag) = jax.lax.scan(
             sync_one, state["master"],
             (state["workers"], state["u_hist"], fail_mask, failed_recent,
-             straggle_in))
+             straggle_in, active_in))
         u, a, w1, w2 = diag
         metrics = {"u": u, "score": a, "h1": w1, "h2": w2}
         return dict(state, workers=workers, master=master,
@@ -330,7 +397,7 @@ class ElasticTrainer:
                     round=state["round"] + 1), metrics
 
     def _comm_phase_fused(self, state, fail_mask, failed_recent,
-                          straggle=None, axis=None):
+                          straggle=None, active=None, axis=None):
         """Batched communication: one vmapped scoring pass over all k
         workers, then a single multi-worker elastic update.
 
@@ -357,9 +424,18 @@ class ElasticTrainer:
             stale_master=(None if straggle is None
                           else state.get("master_prev", master)),
             straggle=straggle)
-        # suppressed communication: no elastic exchange at all
-        w1 = jnp.where(fail_mask, 0.0, w1)
-        w2 = jnp.where(fail_mask, 0.0, w2)
+        # suppressed communication: no elastic exchange at all. A vacant
+        # (inactive) slot additionally freezes its u-history and zeroes its
+        # diagnostics — it contributes g_i = 0 to the master reduction,
+        # exactly like the sequential scan skipping it.
+        dead = (fail_mask if active is None
+                else jnp.logical_or(fail_mask, ~active))
+        w1 = jnp.where(dead, 0.0, w1)
+        w2 = jnp.where(dead, 0.0, w2)
+        if active is not None:
+            hist = jnp.where(active[:, None], hist, state["u_hist"])
+            u = jnp.where(active, u, 0.0)
+            a = jnp.where(active, a, 0.0)
         g2 = dw.master_schedule_weights(w2, axis_name=axis)
         if self.use_pallas and axis is None:
             from repro.kernels.elastic.ops import elastic_update_batched_pallas
@@ -378,18 +454,27 @@ class ElasticTrainer:
     # -- full round ---------------------------------------------------------------
     def _round(self, state, inputs: RoundInputs, axis=None):
         """One simulated round under a failure scenario: optional crash
-        rejoins, the local phase (with per-worker straggler slowdown), then
-        the communication phase under the fail mask. ``axis`` names the
-        worker-hosting mesh axis inside ``shard_map`` (sharded placement);
-        ``apply_restarts`` is per-worker against the replicated master, so
-        it needs no axis awareness."""
-        if inputs.restart is not None:
-            state = self.apply_restarts(state, inputs.restart)
+        rejoins and membership joins (both re-seat params from the master),
+        the local phase (with per-worker straggler slowdown and the
+        live-membership mask), then the communication phase under the fail
+        mask. ``axis`` names the worker-hosting mesh axis inside
+        ``shard_map`` (sharded placement); ``apply_restarts`` is per-worker
+        against the replicated master, so it needs no axis awareness."""
+        reseat = inputs.restart
+        if inputs.join is not None:
+            # a joining slot cold-starts from the master, EASGD-style —
+            # the same re-seat op as a crash-restart rejoin
+            reseat = (inputs.join if reseat is None
+                      else jnp.logical_or(reseat, inputs.join))
+        if reseat is not None:
+            state = self.apply_restarts(state, reseat)
         state, loss = self.local_phase(state, inputs.batches, inputs.rng,
-                                       inputs.straggle, axis=axis)
+                                       inputs.straggle, inputs.active,
+                                       axis=axis)
         state, metrics = self.comm_phase(state, inputs.fail,
                                          inputs.failed_recent,
-                                         inputs.straggle, axis=axis)
+                                         inputs.straggle, inputs.active,
+                                         axis=axis)
         metrics["loss"] = loss
         return state, metrics
 
@@ -450,7 +535,8 @@ class ElasticTrainer:
             batches=P(*lead, None, POD_AXIS),  # (R?, τ, k, ...)
             rng=rep,
             fail=wrk, failed_recent=mask(inputs.failed_recent),
-            straggle=mask(inputs.straggle), restart=mask(inputs.restart))
+            straggle=mask(inputs.straggle), restart=mask(inputs.restart),
+            active=mask(inputs.active), join=mask(inputs.join))
         met_spec = {"u": wrk, "score": wrk, "h1": wrk, "h2": wrk,
                     "loss": rep}
         return state_spec, in_spec, met_spec

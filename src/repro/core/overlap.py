@@ -24,7 +24,17 @@ def overlap_partition(
     n: int, k: int, ratio: float, seed: int = 0
 ) -> Tuple[np.ndarray, List[np.ndarray]]:
     """The §V-A split itself: returns (overlap indices O, [per-worker
-    unique index sets S_j]); deterministic in ``seed``."""
+    unique index sets S_j]); deterministic in ``seed``.
+
+    O depends only on (n, ratio, seed) — not on k — so re-partitioning
+    after a membership change keeps the shared overlap stable and only
+    redeals the unique shards S_j among the new pool.
+
+    The ``len(rest) % k`` remainder is dealt round-robin (one extra sample
+    to each of the first ``rest % k`` workers) instead of being dropped, so
+    every index in D is assigned to at least one worker; when k divides
+    evenly the split is unchanged.
+    """
     if not 0.0 <= ratio < 1.0:
         raise ValueError(f"overlap ratio must be in [0,1), got {ratio}")
     rng = np.random.default_rng(seed)
@@ -32,8 +42,10 @@ def overlap_partition(
     o = int(round(ratio * n))
     overlap = perm[:o]
     rest = perm[o:]
-    per = len(rest) // k
-    uniques = [rest[j * per:(j + 1) * per] for j in range(k)]
+    per, rem = divmod(len(rest), k)
+    bounds = np.cumsum([0] + [per + (1 if j < rem else 0)
+                              for j in range(k)])
+    uniques = [rest[bounds[j]:bounds[j + 1]] for j in range(k)]
     return overlap, uniques
 
 

@@ -28,6 +28,18 @@ so every scenario is jit-compatible by construction:
     ``ElasticTrainer.apply_restarts`` for both rationales (the score's
     recovery path, and the AdaHessian cold-start blow-up a fresh init
     causes).
+``active``
+    optional live-membership mask (ISSUE-5): which of the
+    ``ElasticConfig.cap`` worker *slots* hold a live worker this round.
+    ``None`` means every slot is live for the whole run (the fixed-k fast
+    path). Unlike the three failure masks this stream is *planned*, not
+    random — pools are resized by schedulers, not by coin flips — so the
+    membership generators below are deterministic and seed-free. A slot
+    that flips inactive→active is a **join**: the coordinator re-seats its
+    params from the master (EASGD cold start). A slot that flips
+    active→inactive is a **leave**: it simply freezes. The paper's §VI
+    crash/restart experiments only ever suppress communication; live
+    resize is a deliberate extension beyond §VI (see docs/paper_map.md).
 
 Scenario catalogue (names in ``repro.configs.base.FAILURE_SCENARIOS``):
 
@@ -47,26 +59,35 @@ Scenario catalogue (names in ``repro.configs.base.FAILURE_SCENARIOS``):
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.configs.base import FAILURE_SCENARIOS, ElasticConfig
+from repro.configs.base import (FAILURE_SCENARIOS, MEMBERSHIP_SCENARIOS,
+                                ElasticConfig)
 from repro.core.failure import failure_schedule_np
 
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioSchedule:
-    """Precomputed (rounds, k) bool masks; ``ElasticSession`` feeds rows
-    (per-round) or contiguous blocks (``round_chunk``) into
-    ``RoundInputs``."""
+    """Precomputed (rounds, k) bool masks (k = slot capacity);
+    ``ElasticSession`` feeds rows (per-round) or contiguous blocks
+    (``round_chunk``) into ``RoundInputs``. ``active`` is the optional
+    live-membership stream — ``None`` keeps every slot live."""
 
     fail: np.ndarray
     straggle: np.ndarray
     restart: np.ndarray
+    active: Optional[np.ndarray] = None
 
     def __post_init__(self):
         assert self.fail.shape == self.straggle.shape == self.restart.shape
         assert self.fail.dtype == bool
+        if self.active is not None:
+            assert self.active.shape == self.fail.shape
+            assert self.active.dtype == bool
+            assert self.active.any(axis=1).all(), \
+                "every round needs at least one live worker"
 
     @property
     def rounds(self) -> int:
@@ -83,6 +104,38 @@ class ScenarioSchedule:
     @property
     def has_restarts(self) -> bool:
         return bool(self.restart.any())
+
+    @property
+    def has_membership(self) -> bool:
+        return self.active is not None
+
+    def with_membership(self, active: Optional[np.ndarray]
+                        ) -> "ScenarioSchedule":
+        """Attach a live-membership stream to this schedule (failure masks
+        are kept verbatim; a failure drawn for a vacant slot is simply
+        masked out by the coordinator)."""
+        return dataclasses.replace(self, active=active)
+
+    def joins(self) -> np.ndarray:
+        """(rounds, k) bool — slot flips inactive→active at round r, i.e.
+        the rounds where the coordinator must re-seat a joining slot from
+        the master. Row 0 is all-False: the initial membership is seated by
+        ``init_state``, not by a join event. All-False when ``active`` is
+        ``None``."""
+        if self.active is None:
+            return np.zeros_like(self.fail)
+        out = np.zeros_like(self.active)
+        out[1:] = self.active[1:] & ~self.active[:-1]
+        return out
+
+    def leaves(self) -> np.ndarray:
+        """(rounds, k) bool — slot flips active→inactive at round r (the
+        worker left the pool before this round ran)."""
+        if self.active is None:
+            return np.zeros_like(self.fail)
+        out = np.zeros_like(self.active)
+        out[1:] = ~self.active[1:] & self.active[:-1]
+        return out
 
     def failed_recent(self, r: int) -> np.ndarray:
         """(k,) bool — the worker's sync was suppressed in the *previous*
@@ -316,6 +369,179 @@ class CrashRestartScenario(FailureScenario):
         restart = _zeros(rounds, k)
         restart[1:] = down[:-1] & ~down[1:]
         return ScenarioSchedule(down, _zeros(rounds, k), restart)
+
+
+# ---------------------------------------------------------------------------
+# membership scenarios (ISSUE-5): planned worker-pool resize streams
+# ---------------------------------------------------------------------------
+
+def _active_rows(rounds: int, capacity: int, counts: np.ndarray
+                 ) -> np.ndarray:
+    """(rounds, capacity) mask with ``counts[r]`` live slots at round r,
+    always the lowest-numbered slots (resize keeps surviving workers in
+    place: growing activates the lowest vacant slots, shrinking retires
+    the highest live ones)."""
+    return np.arange(capacity)[None, :] < np.asarray(counts)[:, None]
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipScenario:
+    """Base class: emits a (rounds, capacity) live-slot mask, deterministic
+    and seed-free (membership events are planned by a scheduler, unlike
+    the random failure streams)."""
+
+    name = "static"
+
+    def active_schedule(self, rounds: int, capacity: int, k0: int
+                        ) -> np.ndarray:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticMembership(MembershipScenario):
+    """No membership events: the initial ``k0`` slots stay live. With
+    ``capacity > k0`` this is the capacity-padded steady state the
+    ``--what membership`` benchmark measures."""
+
+    name = "static"
+
+    def active_schedule(self, rounds, capacity, k0):
+        return _active_rows(rounds, capacity,
+                            np.full(rounds, k0, np.int64))
+
+
+def _resolve_round(at: int, rounds: int) -> int:
+    r = at or rounds // 2
+    if not 0 < r < rounds:
+        raise ValueError(
+            f"membership_round={r} must fall inside the run (1..{rounds-1})")
+    return r
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleUpMembership(MembershipScenario):
+    """The pool grows once: k0 → ``k_to`` live workers at round ``at``
+    (defaults: every slot, mid-run). Joining slots cold-start from the
+    master — the EASGD round-robin loop's natural admission."""
+
+    k_to: int = 0
+    at: int = 0
+    name = "scale_up"
+
+    def active_schedule(self, rounds, capacity, k0):
+        k_to, at = self.k_to or capacity, _resolve_round(self.at, rounds)
+        if not k0 < k_to <= capacity:
+            raise ValueError(
+                f"scale_up: need k0 < k_to <= capacity, got "
+                f"{k0} -> {k_to} at capacity {capacity}")
+        counts = np.where(np.arange(rounds) < at, k0, k_to)
+        return _active_rows(rounds, capacity, counts)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDownMembership(MembershipScenario):
+    """The pool shrinks once: k0 → ``k_to`` at round ``at`` (defaults:
+    half the pool, mid-run). Retired slots freeze; their data shards are
+    re-partitioned over the survivors."""
+
+    k_to: int = 0
+    at: int = 0
+    name = "scale_down"
+
+    def active_schedule(self, rounds, capacity, k0):
+        k_to, at = self.k_to or max(1, k0 // 2), _resolve_round(self.at,
+                                                                rounds)
+        if not 1 <= k_to < k0:
+            raise ValueError(
+                f"scale_down: need 1 <= k_to < k0, got {k0} -> {k_to}")
+        counts = np.where(np.arange(rounds) < at, k0, k_to)
+        return _active_rows(rounds, capacity, counts)
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptRejoinMembership(MembershipScenario):
+    """Spot-instance preemption: the highest ``n`` live slots leave the
+    pool at round ``at`` and rejoin ``downtime`` rounds later (cold-started
+    from the master on rejoin). Unlike ``crash_restart`` the slots are
+    *vacant* while gone — no local training, no scoring — which is what
+    actually happens when the instance is reclaimed."""
+
+    n: int = 1
+    at: int = 0
+    downtime: int = 3
+    name = "preempt_rejoin"
+
+    def active_schedule(self, rounds, capacity, k0):
+        at = _resolve_round(self.at, rounds)
+        if not 1 <= self.n < k0:
+            raise ValueError(
+                f"preempt_rejoin: need 1 <= n < k0, got n={self.n}, "
+                f"k0={k0}")
+        if self.downtime < 1:
+            raise ValueError("preempt_rejoin: downtime must be >= 1")
+        down = (np.arange(rounds) >= at) & (np.arange(rounds)
+                                            < at + self.downtime)
+        counts = np.where(down, k0 - self.n, k0)
+        return _active_rows(rounds, capacity, counts)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanMembership(MembershipScenario):
+    """Explicit resize plan: ``steps`` is a sorted tuple of (round, k)
+    events; the pool runs at k0 until the first step, then at each step's
+    k until the next. The CI membership smoke drives 4→2→6 through this."""
+
+    steps: Tuple[Tuple[int, int], ...] = ()
+    name = "plan"
+
+    def active_schedule(self, rounds, capacity, k0):
+        counts = np.full(rounds, k0, np.int64)
+        for r, k in sorted(self.steps):
+            if not 1 <= k <= capacity:
+                raise ValueError(
+                    f"membership plan step ({r}, {k}): k outside "
+                    f"1..{capacity}")
+            if r < rounds:
+                counts[r:] = k
+        return _active_rows(rounds, capacity, counts)
+
+
+def parse_membership_plan(text: str) -> Tuple[Tuple[int, int], ...]:
+    """CLI form of a resize plan: ``"round:k,round:k,..."`` (e.g.
+    ``"2:2,4:6"`` = shrink to 2 workers at round 2, grow to 6 at 4)."""
+    steps = []
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            r, k = part.split(":")
+            steps.append((int(r), int(k)))
+        except ValueError:
+            raise ValueError(
+                f"membership plan step {part!r}: expected 'round:k'")
+    return tuple(steps)
+
+
+def make_membership(ecfg: ElasticConfig) -> MembershipScenario:
+    """Build the membership scenario named by ``ecfg.membership_scenario``
+    from the ElasticConfig knobs (``membership_k``, ``membership_round``,
+    ``membership_plan``; preempt downtime reuses ``crash_downtime``)."""
+    name = ecfg.membership_scenario
+    if name == "static":
+        return StaticMembership()
+    if name == "scale_up":
+        return ScaleUpMembership(ecfg.membership_k, ecfg.membership_round)
+    if name == "scale_down":
+        return ScaleDownMembership(ecfg.membership_k, ecfg.membership_round)
+    if name == "preempt_rejoin":
+        return PreemptRejoinMembership(ecfg.membership_k or 1,
+                                       ecfg.membership_round,
+                                       ecfg.crash_downtime)
+    if name == "plan":
+        return PlanMembership(ecfg.membership_plan)
+    raise ValueError(f"unknown membership scenario {name!r}; "
+                     f"known: {MEMBERSHIP_SCENARIOS}")
 
 
 def make_scenario(ecfg: ElasticConfig) -> FailureScenario:

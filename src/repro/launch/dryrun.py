@@ -20,7 +20,8 @@ from repro.analysis.hlo import collective_bytes  # noqa: E402
 from repro.configs.base import (INPUT_SHAPES, OptimizerConfig,  # noqa: E402
                                 get_config, list_archs, normalize_arch,
                                 shape_supported)
-from repro.core.coordinator import ElasticTrainer, RoundInputs  # noqa: E402
+from repro.core.coordinator import (ElasticTrainer, RoundInputs,  # noqa: E402
+                                    padded_capacity)
 from repro.configs.base import ElasticConfig  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models.registry import build_model  # noqa: E402
@@ -146,7 +147,8 @@ def _analyse(lowered, compiled, mesh, elapsed):
 
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                opt_name: str = "adahessian", remat: str = "none",
-               rules=None, elastic_workers: int = 2):
+               rules=None, elastic_workers: int = 2,
+               elastic_capacity: int = 0):
     arch = normalize_arch(arch)
     shape = INPUT_SHAPES[shape_name]
     if not shape_supported(arch, shape_name):
@@ -167,10 +169,15 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         # `--placement sharded` executes on a host mesh; no dryrun-private
         # lowering of the round anymore.
         k = elastic_workers
-        ecfg = ElasticConfig(num_workers=k, tau=1, comm_mode="fused",
-                             placement="sharded")
+        # the slot axis is capacity-padded to a multiple of the pod axis
+        # (uneven-shard masking, ISSUE-5); with no --elastic-capacity the
+        # pool is exactly k slots, as before
+        cap = padded_capacity(elastic_capacity or k, mesh.shape["pod"])
+        ecfg = ElasticConfig(num_workers=k,
+                             capacity=(0 if cap == k else cap),
+                             tau=1, comm_mode="fused", placement="sharded")
         trainer = ElasticTrainer(model, opt_cfg, ecfg, mesh=mesh)
-        wspec = stack_specs(model.spec, k, "worker")
+        wspec = stack_specs(model.spec, cap, "worker")
         f32spec = tree_map_spec(
             lambda s: ParamSpec(s.shape, jnp.float32, s.init, s.axes), wspec)
         mspec = tree_map_spec(
@@ -178,14 +185,15 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             model.spec)
         in_specs = model.input_specs(shape)
         per_worker = {
-            name: ParamSpec((1, k, s.shape[0] // k) + s.shape[1:], s.dtype,
-                            axes=(None, "worker") + s.axes)
+            name: ParamSpec((1, cap, s.shape[0] // cap) + s.shape[1:],
+                            s.dtype, axes=(None, "worker") + s.axes)
             for name, s in in_specs.items()}
         rep = NamedSharding(mesh, P())
         state = {
             "workers": _abstract_pod(wspec, mesh),
             "opt": {"count": _abstract_pod(
-                        ParamSpec((k,), jnp.int32, axes=("worker",)), mesh),
+                        ParamSpec((cap,), jnp.int32, axes=("worker",)),
+                        mesh),
                     "m": _abstract_pod(f32spec, mesh),
                     "v": _abstract_pod(f32spec, mesh)},
             "master": jax.tree.map(
@@ -193,15 +201,21 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                                                 sharding=rep),
                 abstract_tree(mspec)),
             "u_hist": _abstract_pod(
-                ParamSpec((k, ecfg.score_window), jnp.float32), mesh),
+                ParamSpec((cap, ecfg.score_window), jnp.float32), mesh),
             "round": jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
         }
         state["master_prev"] = state["master"]
+        slot_mask = lambda: _abstract_pod(ParamSpec((cap,), jnp.bool_), mesh)
         inputs = RoundInputs(
             batches=_abstract_pod(per_worker, mesh, pod_dim=1),
             rng=jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rep),
-            fail=_abstract_pod(ParamSpec((k,), jnp.bool_), mesh),
-            failed_recent=_abstract_pod(ParamSpec((k,), jnp.bool_), mesh))
+            fail=slot_mask(),
+            failed_recent=slot_mask(),
+            # capacity-padded pools lower the masked round (live-membership
+            # select + join re-seat in the graph); exact-fit pools keep the
+            # fixed-k specialized trace
+            active=slot_mask() if cap > k else None,
+            join=slot_mask() if cap > k else None)
         jitted = jax.jit(
             lambda s, i: trainer._round_sharded(s, i, chunk=False),
             donate_argnums=(0,))
@@ -287,6 +301,15 @@ def main():
     ap.add_argument("--remat", default="none", choices=["none", "full"])
     ap.add_argument("--rules", default="baseline",
                     choices=sorted(RULE_SETS))
+    ap.add_argument("--elastic-workers", type=int, default=2,
+                    help="initial live workers in the multi-pod elastic "
+                         "train lowering")
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="worker-slot capacity for the elastic lowering "
+                         "(0 = exactly --elastic-workers); padded up to a "
+                         "multiple of the pod axis, extra slots inactive — "
+                         "capacities > workers lower the membership-masked "
+                         "round")
     ap.add_argument("--out", default=None)
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
@@ -313,7 +336,9 @@ def main():
                 try:
                     r = dryrun_one(arch, shape, multi_pod=mp,
                                    opt_name=args.opt, remat=args.remat,
-                                   rules=RULE_SETS[args.rules])
+                                   rules=RULE_SETS[args.rules],
+                                   elastic_workers=args.elastic_workers,
+                                   elastic_capacity=args.capacity)
                 except Exception as e:  # noqa: BLE001
                     r = {"arch": normalize_arch(arch), "shape": shape,
                          "multi_pod": mp, "status": "error",

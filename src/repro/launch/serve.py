@@ -34,7 +34,20 @@ def main(argv=None):
     model = build_model(cfg)
     params = init_tree(jax.random.key(0), model.spec)
     if args.restore:
+        # check the manifest before paying for (or crashing inside) the
+        # restore: a genuinely different arch fails on missing params, and
+        # the warning tells the user why
+        meta = checkpoint.read_metadata(args.restore)
+        ck_arch = meta.get("arch")
+        if ck_arch is not None and ck_arch != cfg.name:
+            print(f"[serve] WARNING: checkpoint {args.restore!r} was saved "
+                  f"from arch {ck_arch!r} but --arch resolves to "
+                  f"{cfg.name!r} — the restore below will fail unless the "
+                  "parameter trees happen to match; double-check the flags")
         params, _ = checkpoint.restore(args.restore, like=params)
+        if meta.get("rounds") is not None:
+            print(f"[serve] restored {args.restore} "
+                  f"(arch={ck_arch or '?'}, rounds={meta['rounds']})")
     print(f"serving {cfg.name}: {param_count(model.spec):,} params")
     engine = ServeEngine(model, params,
                          max_len=args.prompt_len + args.steps + 1)

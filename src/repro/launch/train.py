@@ -17,6 +17,10 @@ simulating all k workers on one device — master params stay bit-exact with
 single placement; force a multi-device CPU host with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to exercise it
 without TPUs (with one device, sharded runs on a 1-way pod axis).
+``--capacity C`` pads the worker axis to C slots so the pool can resize
+live (``--membership-scenario`` / ``--membership-plan "2:2,4:6"``) with
+zero recompiles; under sharded placement capacity is padded to a multiple
+of the pod axis and the extra slots stay inactive.
 """
 from __future__ import annotations
 
@@ -26,8 +30,9 @@ import time
 import numpy as np
 
 from repro.api import ElasticSession, RunSpec
-from repro.configs.base import (FAILURE_SCENARIOS, ElasticConfig,
-                                OptimizerConfig)
+from repro.configs.base import (FAILURE_SCENARIOS, MEMBERSHIP_SCENARIOS,
+                                ElasticConfig, OptimizerConfig)
+from repro.core.scenarios import parse_membership_plan
 
 
 def main(argv=None):
@@ -40,6 +45,25 @@ def main(argv=None):
                     help="rounds executed inside one jit call (lax.scan "
                          "chunking; 1 = per-round dispatch)")
     ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="worker-slot capacity (>= --workers; 0 = exactly "
+                         "--workers). Shapes are fixed at capacity, so "
+                         "membership can resize up to it with zero "
+                         "recompiles; under --placement sharded it is "
+                         "padded up to a multiple of the pod axis")
+    ap.add_argument("--membership-scenario", default="static",
+                    choices=MEMBERSHIP_SCENARIOS,
+                    help="planned worker-pool resize stream "
+                         "(repro/core/scenarios.py); 'plan' runs "
+                         "--membership-plan")
+    ap.add_argument("--membership-k", type=int, default=0,
+                    help="resize target (scale_up/scale_down) or preempted "
+                         "count (preempt_rejoin); 0 = scenario default")
+    ap.add_argument("--membership-round", type=int, default=0,
+                    help="round the membership event fires (0 = mid-run)")
+    ap.add_argument("--membership-plan", default="",
+                    help="explicit resize steps 'round:k,round:k' (e.g. "
+                         "'2:2,4:6'); implies --membership-scenario plan")
     ap.add_argument("--tau", type=int, default=1)
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--seq-len", type=int, default=128)
@@ -73,12 +97,44 @@ def main(argv=None):
     ap.add_argument("--save", default=None)
     args = ap.parse_args(argv)
 
+    membership = args.membership_scenario
+    plan = ()
+    if args.membership_plan:
+        membership = "plan"
+        plan = parse_membership_plan(args.membership_plan)
+    capacity = args.capacity
+    if membership != "static" and not capacity:
+        # resize needs headroom: default the slot pool to the largest
+        # worker count the scheduled stream ever reaches; a scale_up with
+        # no explicit target grows into its headroom, so give it some
+        capacity = max([args.workers, args.membership_k]
+                       + [k for _, k in plan])
+        if membership == "scale_up" and not args.membership_k:
+            capacity = 2 * args.workers
+    if args.placement == "sharded":
+        # the slot axis partitions evenly over the pod axis; pad capacity
+        # up and leave the extra slots permanently inactive (uneven-shard
+        # masking: shards hold equal slots, not equal live workers)
+        import jax
+
+        from repro.core.coordinator import padded_capacity
+
+        padded = padded_capacity(capacity or args.workers,
+                                 jax.device_count())
+        if padded != (capacity or args.workers):
+            print(f"[train] padding capacity {capacity or args.workers} -> "
+                  f"{padded} (multiple of the {jax.device_count()}-way pod "
+                  "axis; extra slots stay inactive)")
+            capacity = padded
     ecfg = ElasticConfig(
-        num_workers=args.workers, tau=args.tau, alpha=args.alpha,
-        overlap_ratio=args.overlap, failure_prob=args.failure_prob,
+        num_workers=args.workers, capacity=capacity, tau=args.tau,
+        alpha=args.alpha, overlap_ratio=args.overlap,
+        failure_prob=args.failure_prob,
         dynamic=not args.no_dynamic, comm_mode=args.comm_mode,
         placement=args.placement,
-        failure_scenario=args.failure_scenario)
+        failure_scenario=args.failure_scenario,
+        membership_scenario=membership, membership_k=args.membership_k,
+        membership_round=args.membership_round, membership_plan=plan)
     spec = RunSpec(
         arch=args.arch, smoke=args.smoke,
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr),
@@ -95,6 +151,8 @@ def main(argv=None):
             print(f"step {rec.round}: loss={rec.loss:.4f}", flush=True)
             continue
         extra = ""
+        if sess.schedule.has_membership:
+            extra += f" k={rec.num_active}/{sess.capacity}"
         if sess.schedule.has_stragglers:
             extra += f" straggle={rec.straggle.astype(int).tolist()}"
         if sess.schedule.has_restarts:

@@ -39,6 +39,75 @@ def test_restore_without_like(tmp_path):
     assert len(restored["opt"]["m"]) == 2
 
 
+def test_large_leaf_chunks_across_shards(tmp_path):
+    """ISSUE-5 satellite: a leaf bigger than MAX_SHARD_BYTES is split into
+    flat chunks spread over >= 2 npz shards and reassembled bit-exactly,
+    with smaller leaves packed around it and dtype restoration intact."""
+    tree = {
+        "big": np.arange(5000, dtype=np.float32).reshape(50, 100),  # 20 kB
+        "small": jnp.ones((7,), jnp.bfloat16),
+        "scalar": np.asarray(3, np.int32),
+    }
+    path = str(tmp_path / "ck")
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(checkpoint, "MAX_SHARD_BYTES", 4096)
+        checkpoint.save(path, tree, metadata={"round": 9})
+    shards = sorted(p.name for p in tmp_path.glob("ck/shard_*.npz"))
+    assert len(shards) >= 2
+    import json
+
+    with open(tmp_path / "ck" / "manifest.json") as f:
+        manifest = json.load(f)
+    assert len(manifest["keys"]["big"]["parts"]) >= 2
+    assert "shard" in manifest["keys"]["small"]
+
+    restored, meta = checkpoint.restore(path)
+    assert meta["round"] == 9
+    np.testing.assert_array_equal(restored["big"], tree["big"])
+    assert restored["big"].shape == (50, 100)
+    # like-restore reassembles and casts identically
+    r2, _ = checkpoint.restore(path, like=tree)
+    assert r2["small"].dtype == jnp.bfloat16
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(r2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_elastic_manifest_reseat_different_capacity():
+    """The membership manifest re-seats live slots' u-histories into pools
+    of any capacity: live rows map onto the new active slots in order,
+    everything else is blank fill."""
+    hist = np.arange(20, dtype=np.float32).reshape(4, 5)
+    el = checkpoint.elastic_manifest(np.array([1, 0, 1, 0], bool), hist)
+    assert el["capacity"] == 4
+
+    # grow: 2 live rows land in the first 2 of 3 active slots of 8
+    out = checkpoint.reseat_u_hist(el, 8, np.arange(8) < 3, window=5)
+    np.testing.assert_array_equal(out[0], hist[0])
+    np.testing.assert_array_equal(out[1], hist[2])
+    assert (out[2:] == checkpoint.U_HIST_FILL).all()
+
+    # shrink: only the first live row fits a 1-slot pool
+    out = checkpoint.reseat_u_hist(el, 1, np.ones(1, bool), window=5)
+    np.testing.assert_array_equal(out[0], hist[0])
+
+    # window change aligns on the newest entries
+    out = checkpoint.reseat_u_hist(el, 4, np.ones(4, bool), window=3)
+    np.testing.assert_array_equal(out[0], hist[0, 2:])
+
+    # missing/garbled manifests degrade to blank histories
+    assert (checkpoint.reseat_u_hist(None, 4, np.ones(4, bool), 5)
+            == checkpoint.U_HIST_FILL).all()
+    assert (checkpoint.reseat_u_hist({"active": [1]}, 4, np.ones(4, bool), 5)
+            == checkpoint.U_HIST_FILL).all()
+
+
+def test_read_metadata_is_cheap(tmp_path):
+    path = str(tmp_path / "ck")
+    checkpoint.save(path, _tree(), metadata={"arch": "paper-cnn"})
+    assert checkpoint.read_metadata(path)["arch"] == "paper-cnn"
+
+
 def test_model_params_roundtrip(tmp_path):
     from repro.configs.base import get_config
     from repro.models.registry import build_model

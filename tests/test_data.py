@@ -32,7 +32,7 @@ def test_worker_batcher_shapes_and_overlap():
     assert b["images"].shape == (3, 4, 8, 28, 28, 1)
     assert b["labels"].shape == (3, 4, 8)
     # worker index sets share exactly the overlap fraction
-    sets = [set(ix.tolist()) for ix in wb.indices]
+    sets = [set(ix.tolist()) for ix in wb.indices.values()]
     shared = set.intersection(*sets)
     assert len(shared) == round(0.25 * 400)
 
@@ -54,6 +54,48 @@ def test_token_stream_and_batcher():
     b = tb.round_batches()
     assert b["tokens"].shape == (2, 2, 4, 16)
     np.testing.assert_array_equal(b["tokens"][..., 1:], b["targets"][..., :-1])
+
+
+def test_capacity_padded_batcher_pads_vacant_slots():
+    """(ISSUE-5) A capacity-padded batcher emits (τ, cap, B, ...) stacks:
+    live slots carry real data, vacant slots a zero pad, and membership
+    changes redeal the unique shards while the overlap O stays put."""
+    ds = SyntheticImages(n=400, n_test=10)
+    ecfg = ElasticConfig(num_workers=2, capacity=4, tau=2,
+                         overlap_ratio=0.25)
+    wb = WorkerBatcher(ds.images, ds.labels, ecfg, batch_size=8)
+    b = wb.round_batches()
+    assert b["images"].shape == (2, 4, 8, 28, 28, 1)
+    assert (b["images"][:, 2:] == 0).all() and (b["images"][:, :2] != 0).any()
+    overlap_before = set.intersection(*[set(ix.tolist())
+                                        for ix in wb.indices.values()])
+
+    wb.set_active([0, 1, 3])  # slot 3 joins
+    b = wb.round_batches()
+    assert (b["images"][:, 2] == 0).all() and (b["images"][:, 3] != 0).any()
+    assert sorted(wb.indices) == [0, 1, 3]
+    overlap_after = set.intersection(*[set(ix.tolist())
+                                       for ix in wb.indices.values()])
+    assert overlap_before == overlap_after  # O is membership-invariant
+
+    with pytest.raises(ValueError, match="slot"):
+        wb.set_active([0, 9])
+    with pytest.raises(ValueError, match="slot"):
+        wb.set_active([])
+
+
+def test_token_batcher_membership_repartition():
+    ts = SyntheticTokens(vocab=128, n_tokens=5000, seed=1)
+    ecfg = ElasticConfig(num_workers=2, capacity=3, tau=1,
+                         overlap_ratio=0.125)
+    tb = TokenWorkerBatcher(ts.tokens, ecfg, batch_size=4, seq_len=16)
+    b = tb.round_batches()
+    assert b["tokens"].shape == (1, 3, 4, 16)
+    assert (b["tokens"][:, 2] == 0).all()
+    tb.set_active_mask(np.array([True, True, True]))
+    b = tb.round_batches()
+    assert sorted(tb.starts) == [0, 1, 2]
+    assert b["tokens"].shape == (1, 3, 4, 16)
 
 
 def test_token_stream_has_structure():

@@ -56,6 +56,30 @@ def test_train_cli_checkpoint_roundtrip(tmp_path, capsys):
 
 
 @pytest.mark.slow
+def test_train_cli_membership_plan(capsys):
+    """--capacity/--membership-plan drive a live 2→1→3 resize through the
+    CLI; the per-round line shows the live count against capacity."""
+    train_cli.main([
+        "--arch", "paper-cnn", "--rounds", "3", "--workers", "2",
+        "--capacity", "4", "--batch-size", "8",
+        "--membership-plan", "1:1,2:3"])
+    out = capsys.readouterr().out
+    assert "k=2/4" in out and "k=1/4" in out and "k=3/4" in out
+
+
+@pytest.mark.slow
+def test_train_cli_scale_up_defaults(capsys):
+    """Regression: --membership-scenario scale_up with no explicit
+    --capacity/--membership-k must default to a pool with headroom (2k)
+    instead of crashing on k0 == k_to == capacity."""
+    train_cli.main([
+        "--arch", "paper-cnn", "--rounds", "2", "--workers", "2",
+        "--batch-size", "8", "--membership-scenario", "scale_up"])
+    out = capsys.readouterr().out
+    assert "k=2/4" in out and "k=4/4" in out
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("scenario", ["iid", "burst", "correlated",
                                       "straggler", "crash_restart"])
 def test_train_cli_failure_scenarios_end_to_end(capsys, scenario):

@@ -1,0 +1,498 @@
+"""Elastic worker-pool membership (ISSUE-5): capacity-padded worker axis,
+live join/leave/resize, and the refactor's safety rail — an all-active
+membership mask is bit-exact with the unmasked fixed-k coordinator across
+{sequential, fused} × {per-round, chunked} × {single, sharded}.
+
+The multi-device sharded checks run in a subprocess (device count locks at
+jax init); the in-process sharded check runs the full shard_map path on a
+pod=1 mesh.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ElasticSession, RunSpec
+from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+from repro.core.coordinator import (ElasticTrainer, RoundInputs,
+                                    padded_capacity)
+from repro.core.scenarios import (PlanMembership, PreemptRejoinMembership,
+                                  ScaleDownMembership, ScaleUpMembership,
+                                  StaticMembership, make_membership,
+                                  make_scenario, parse_membership_plan)
+from repro.models.registry import build_model
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ROUNDS, K = 4, 2
+
+
+def _spec(comm_mode="sequential", scenario="iid", rpc=1, **kw):
+    ecfg = kw.pop("elastic", None) or ElasticConfig(
+        num_workers=K, tau=2, alpha=0.1, dynamic=True, failure_prob=0.4,
+        comm_mode=comm_mode, failure_scenario=scenario)
+    defaults = dict(arch="paper-cnn",
+                    optimizer=OptimizerConfig(name="sgd", lr=0.01),
+                    elastic=ecfg, rounds=ROUNDS, rounds_per_call=rpc,
+                    seed=1, batch_size=4, n_data=96, n_test=32)
+    defaults.update(kw)
+    return RunSpec(**defaults)
+
+
+def _assert_trees_bit_exact(a, b, msg=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# config validation + capacity helpers
+# ---------------------------------------------------------------------------
+
+def test_capacity_validated():
+    with pytest.raises(ValueError, match="capacity"):
+        ElasticConfig(num_workers=4, capacity=2)
+    assert ElasticConfig(num_workers=4, capacity=8).cap == 8
+    assert ElasticConfig(num_workers=4).cap == 4
+
+
+def test_membership_scenario_validated():
+    with pytest.raises(ValueError, match="membership_scenario"):
+        ElasticConfig(membership_scenario="nope")
+    with pytest.raises(ValueError, match="membership_plan"):
+        ElasticConfig(membership_scenario="plan")
+    with pytest.raises(ValueError, match="plan step"):
+        ElasticConfig(num_workers=2, capacity=4, membership_scenario="plan",
+                      membership_plan=((1, 9),))  # k > capacity
+
+
+def test_padded_capacity():
+    assert padded_capacity(4, 4) == 4
+    assert padded_capacity(5, 4) == 8
+    assert padded_capacity(3, 1) == 3
+    assert padded_capacity(1, 4) == 4
+
+
+def test_sharded_trainer_validates_capacity_not_workers():
+    """Uneven live pools are fine under sharding as long as the *slot*
+    capacity divides the pod axis."""
+
+    class FakeMesh:
+        shape = {"pod": 4}
+        axis_names = ("pod",)
+
+    model = build_model(get_config("paper_cnn"))
+    ElasticTrainer(model, OptimizerConfig(name="sgd", lr=0.01),
+                   ElasticConfig(num_workers=3, capacity=4,
+                                 comm_mode="fused", placement="sharded"),
+                   mesh=FakeMesh())  # ok: cap 4 divides, 3 live workers
+    with pytest.raises(ValueError, match="capacity"):
+        ElasticTrainer(model, OptimizerConfig(name="sgd", lr=0.01),
+                       ElasticConfig(num_workers=3, comm_mode="fused",
+                                     placement="sharded"), mesh=FakeMesh())
+
+
+# ---------------------------------------------------------------------------
+# membership scenario generators
+# ---------------------------------------------------------------------------
+
+def test_static_membership_rows():
+    rows = StaticMembership().active_schedule(5, 4, 2)
+    assert rows.shape == (5, 4) and rows.dtype == bool
+    np.testing.assert_array_equal(rows, [[True, True, False, False]] * 5)
+
+
+def test_scale_up_and_down_rows():
+    up = ScaleUpMembership(k_to=4, at=2).active_schedule(5, 4, 2)
+    assert up.sum(axis=1).tolist() == [2, 2, 4, 4, 4]
+    down = ScaleDownMembership(k_to=1, at=3).active_schedule(5, 4, 3)
+    assert down.sum(axis=1).tolist() == [3, 3, 3, 1, 1]
+    with pytest.raises(ValueError, match="scale_up"):
+        ScaleUpMembership(k_to=2, at=1).active_schedule(5, 4, 2)
+    with pytest.raises(ValueError, match="membership_round"):
+        ScaleUpMembership(k_to=4, at=7).active_schedule(5, 4, 2)
+
+
+def test_preempt_rejoin_rows():
+    rows = PreemptRejoinMembership(n=2, at=2, downtime=2
+                                   ).active_schedule(7, 4, 4)
+    assert rows.sum(axis=1).tolist() == [4, 4, 2, 2, 4, 4, 4]
+    # the preempted slots are the highest-numbered live ones
+    np.testing.assert_array_equal(rows[2], [True, True, False, False])
+
+
+def test_plan_membership_and_parse():
+    assert parse_membership_plan("2:2, 4:6") == ((2, 2), (4, 6))
+    with pytest.raises(ValueError, match="round:k"):
+        parse_membership_plan("2-2")
+    rows = PlanMembership(((2, 2), (4, 6))).active_schedule(6, 8, 4)
+    assert rows.sum(axis=1).tolist() == [4, 4, 2, 2, 6, 6]
+
+
+def test_schedule_joins_and_leaves():
+    ecfg = ElasticConfig(num_workers=4, capacity=8,
+                         membership_scenario="plan",
+                         membership_plan=((2, 2), (4, 6)))
+    rows = make_membership(ecfg).active_schedule(6, 8, 4)
+    sched = make_scenario(ecfg).schedule(0, 6, 8).with_membership(rows)
+    joins, leaves = sched.joins(), sched.leaves()
+    assert joins[0].sum() == 0  # round 0 seats via init, not join
+    assert joins[4].sum() == 4 and joins.sum() == 4  # 2 -> 6: slots 2..5
+    assert leaves[2].sum() == 2 and leaves.sum() == 2  # 4 -> 2
+    with pytest.raises(AssertionError, match="live"):
+        sched.with_membership(np.zeros((6, 8), bool))
+
+
+def test_every_membership_scenario_buildable():
+    for name in ("static", "scale_up", "scale_down", "preempt_rejoin"):
+        ecfg = ElasticConfig(num_workers=4, capacity=8,
+                             membership_scenario=name)
+        rows = make_membership(ecfg).active_schedule(6, 8, 4)
+        assert rows.shape == (6, 8) and rows.any(axis=1).all()
+
+
+# ---------------------------------------------------------------------------
+# the safety rail: all-active mask == unmasked fixed-k, bit-exact
+# ---------------------------------------------------------------------------
+
+def _run_master(comm_mode, rpc, force_mask, scenario="crash_restart"):
+    spec = _spec(comm_mode, scenario, rpc)
+    sched = make_scenario(spec.elastic).schedule(spec.seed + 7, ROUNDS, K)
+    if force_mask:
+        sched = sched.with_membership(np.ones((ROUNDS, K), bool))
+    sess = ElasticSession(spec.replace(schedule=sched))
+    recs = sess.run()
+    return sess.master_params, recs
+
+
+@pytest.mark.parametrize("comm_mode", ["sequential", "fused"])
+@pytest.mark.parametrize("rpc", [1, 3])
+def test_all_active_mask_bit_exact_vs_fixed_k(comm_mode, rpc):
+    """The acceptance bar: forcing an all-True active mask through the
+    masked round produces the identical master params (and diagnostics) as
+    the unmasked fixed-k path, per-round and chunked, both comm modes."""
+    want, wrecs = _run_master(comm_mode, rpc, force_mask=False)
+    got, grecs = _run_master(comm_mode, rpc, force_mask=True)
+    _assert_trees_bit_exact(want, got, f"{comm_mode} rpc={rpc}")
+    for a, b in zip(wrecs, grecs):
+        np.testing.assert_array_equal(a.h2, b.h2)
+        np.testing.assert_array_equal(a.u, b.u)
+        np.testing.assert_array_equal(np.float32(a.loss), np.float32(b.loss))
+
+
+def test_all_active_mask_bit_exact_sharded_pod1():
+    """Same property through the full shard_map machinery (pod=1 mesh)."""
+    ecfg = ElasticConfig(num_workers=K, tau=1, dynamic=True,
+                         failure_prob=0.4, comm_mode="fused",
+                         placement="sharded")
+    spec = _spec(elastic=ecfg, rounds=2)
+    sched = make_scenario(ecfg).schedule(spec.seed + 7, 2, K)
+    a = ElasticSession(spec.replace(schedule=sched))
+    a.run()
+    b = ElasticSession(spec.replace(
+        schedule=sched.with_membership(np.ones((2, K), bool))))
+    b.run()
+    _assert_trees_bit_exact(a.master_params, b.master_params)
+
+
+# ---------------------------------------------------------------------------
+# masked-round semantics
+# ---------------------------------------------------------------------------
+
+def _tiny_trainer(comm_mode="fused", cap=3, k=2):
+    model = build_model(get_config("paper_cnn"))
+    return ElasticTrainer(model, OptimizerConfig(name="sgd", lr=0.01),
+                          ElasticConfig(num_workers=k, capacity=cap, tau=1,
+                                        dynamic=True, comm_mode=comm_mode))
+
+
+def _round_inputs(cap, active=None, join=None, rng=0):
+    batches = {"images": jnp.ones((1, cap, 2, 28, 28, 1), jnp.float32),
+               "labels": jnp.zeros((1, cap, 2), jnp.int32)}
+    return RoundInputs(
+        batches=batches, rng=jax.random.key(rng),
+        fail=jnp.zeros(cap, bool), failed_recent=jnp.zeros(cap, bool),
+        active=None if active is None else jnp.asarray(active),
+        join=None if join is None else jnp.asarray(join))
+
+
+@pytest.mark.parametrize("comm_mode", ["sequential", "fused"])
+def test_inactive_slot_fully_frozen(comm_mode):
+    """A vacant slot neither trains, nor syncs, nor pushes u-history, nor
+    leaks into the mean loss; the live workers' sync is untouched by its
+    presence (sequential event order preserved)."""
+    tr = _tiny_trainer(comm_mode)
+    state = tr.init_state(jax.random.key(0))
+    # give the vacant slot recognizable params/history
+    poison = jax.tree.map(lambda x: x.at[2].set(7.0), state["workers"])
+    state = dict(state, workers=poison,
+                 u_hist=state["u_hist"].at[2].set(5.0))
+    before = jax.tree.map(lambda x: np.asarray(x[2]).copy(),
+                          state["workers"])
+    active = np.array([True, True, False])
+    new, m = tr.round_step(state, _round_inputs(3, active=active))
+    after = jax.tree.map(lambda x: np.asarray(x[2]), new["workers"])
+    _assert_trees_bit_exact(before, after, "vacant slot params moved")
+    np.testing.assert_array_equal(np.asarray(new["u_hist"][2]),
+                                  np.full(tr.ecfg.score_window, 5.0))
+    assert m["h1"][2] == 0.0 and m["h2"][2] == 0.0 and m["u"][2] == 0.0
+    assert np.isfinite(m["loss"])
+
+
+def test_join_reseats_slot_from_master():
+    """A joining slot's params are re-seated from the master before its
+    first local phase — poisoned pre-join params never survive a join."""
+    tr = _tiny_trainer("sequential")
+    state = tr.init_state(jax.random.key(0))
+    state = dict(state, workers=jax.tree.map(
+        lambda x: x.at[2].set(1e6), state["workers"]))
+    active = np.array([True, True, True])
+    join = np.array([False, False, True])
+    new, m = tr.round_step(state, _round_inputs(3, active=active, join=join))
+    for leaf in jax.tree.leaves(new["workers"]):
+        assert np.abs(np.asarray(leaf[2], np.float32)).max() < 1e3, \
+            "join did not re-seat from master"
+    assert np.isfinite(m["loss"])
+
+
+def test_mean_loss_counts_live_workers_only():
+    tr = _tiny_trainer("fused")
+    state = tr.init_state(jax.random.key(0))
+    s2 = jax.tree.map(jnp.copy, state)
+    _, m_all = tr.round_step(state, _round_inputs(3))
+    _, m_live = tr.round_step(s2, _round_inputs(
+        3, active=np.array([True, True, False])))
+    # identical per-worker data (all-ones batches) → identical mean loss
+    np.testing.assert_allclose(float(m_all["loss"]),
+                               float(m_live["loss"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# session lifecycle: scheduled + live membership
+# ---------------------------------------------------------------------------
+
+def _plan_ecfg(comm_mode="sequential", **kw):
+    defaults = dict(num_workers=4, capacity=8, tau=1, dynamic=True,
+                    failure_prob=0.3, comm_mode=comm_mode,
+                    membership_scenario="plan",
+                    membership_plan=((2, 2), (4, 6)))
+    defaults.update(kw)
+    return ElasticConfig(**defaults)
+
+
+def test_membership_chunking_invariant():
+    """Chunk boundaries snap to membership transitions, so chunked and
+    per-round execution agree bit-exactly through a 4→2→6 resize."""
+    spec = _spec(elastic=_plan_ecfg(), rounds=6)
+    a = ElasticSession(spec)
+    ra = a.run()
+    b = ElasticSession(spec.replace(rounds_per_call=4))
+    rb = b.run()
+    _assert_trees_bit_exact(a.master_params, b.master_params)
+    assert [r.num_active for r in ra] == [4, 4, 2, 2, 6, 6]
+    for x, y in zip(ra, rb):
+        np.testing.assert_array_equal(x.active, y.active)
+        np.testing.assert_array_equal(x.h2, y.h2)
+
+
+def test_membership_repartitions_data():
+    spec = _spec(elastic=_plan_ecfg(), rounds=6)
+    sess = ElasticSession(spec)
+    sess.run(2)
+    assert sess.batcher.active == (0, 1, 2, 3)
+    sess.run(2)
+    assert sess.batcher.active == (0, 1)
+    sess.run()
+    assert sess.batcher.active == (0, 1, 2, 3, 4, 5)
+    assert sess.num_active == 6
+
+
+def test_vacant_slot_records_are_zeroed():
+    spec = _spec(elastic=_plan_ecfg("fused"), rounds=6)
+    recs = ElasticSession(spec).run()
+    for r in recs:
+        assert r.active.shape == (8,)
+        np.testing.assert_array_equal(r.h2[~r.active], 0.0)
+        np.testing.assert_array_equal(r.u[~r.active], 0.0)
+
+
+def test_live_resize_between_runs():
+    ecfg = ElasticConfig(num_workers=2, capacity=4, tau=1, dynamic=True)
+    sess = ElasticSession(_spec(elastic=ecfg, rounds=6))
+    sess.run(2)
+    sess.resize(4)
+    assert sess.num_active == 4
+    recs = sess.run(2)
+    assert [r.num_active for r in recs] == [4, 4]
+    sess.resize(1)
+    recs = sess.run()
+    assert [r.num_active for r in recs] == [1, 1]
+    with pytest.raises(ValueError, match="resize"):
+        sess.resize(9)
+    with pytest.raises(ValueError, match="complete"):
+        sess.set_membership(np.ones(4, bool))
+
+
+def test_set_membership_validation():
+    ecfg = ElasticConfig(num_workers=2, capacity=4, tau=1, dynamic=True)
+    sess = ElasticSession(_spec(elastic=ecfg, rounds=2))
+    with pytest.raises(ValueError, match="shape"):
+        sess.set_membership(np.ones(3, bool))
+    with pytest.raises(ValueError, match="active"):
+        sess.set_membership(np.zeros(4, bool))
+    plain = ElasticSession(_spec(plain=True, rounds=2))
+    with pytest.raises(ValueError, match="plain"):
+        plain.set_membership(np.ones(1, bool))
+
+
+def test_runspec_schedule_validated_at_capacity():
+    from repro.core.scenarios import ScenarioSchedule
+
+    z = np.zeros((ROUNDS, K), bool)
+    ecfg = ElasticConfig(num_workers=K, capacity=K + 2)
+    with pytest.raises(ValueError, match="capacity"):
+        _spec(elastic=ecfg, schedule=ScenarioSchedule(z, z, z))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: scale-down → save → restore at larger capacity → scale-up
+# ---------------------------------------------------------------------------
+
+def test_scale_down_checkpoint_restore_scale_up(tmp_path):
+    """The ISSUE-5 end-to-end acceptance: a scaled-down run checkpoints its
+    membership manifest; a session at a *larger* capacity restores it —
+    master exact, live slots' u-histories re-seated, every worker slot
+    cold-started from the master — then scales up with joiners initialized
+    from the master."""
+    ck = str(tmp_path / "ck")
+    ecfg1 = ElasticConfig(num_workers=4, tau=1, dynamic=True,
+                          membership_scenario="scale_down", membership_k=2,
+                          membership_round=2)
+    s1 = ElasticSession(_spec(elastic=ecfg1, rounds=4, save_path=ck))
+    s1.run()
+    assert s1.active_mask.tolist() == [True, True, False, False]
+
+    ecfg2 = ElasticConfig(num_workers=2, capacity=8, tau=1, dynamic=True)
+    s2 = ElasticSession(_spec(elastic=ecfg2, rounds=6, rounds_per_call=2,
+                              seed=2))
+    meta = s2.restore(ck)
+    assert meta["elastic"]["capacity"] == 4
+    # master restored exactly
+    _assert_trees_bit_exact(
+        jax.tree.map(np.asarray, s1.master_params),
+        jax.tree.map(np.asarray, s2.master_params))
+    # every slot (including future joiners) re-seated from the master
+    for i in range(8):
+        for w, m in zip(jax.tree.leaves(s2.state["workers"]),
+                        jax.tree.leaves(s2.state["master"])):
+            np.testing.assert_array_equal(np.asarray(w[i], np.float32),
+                                          np.asarray(m, np.float32))
+    # the two surviving slots carried their u-histories across capacities
+    uh1 = np.asarray(s1.state["u_hist"])
+    uh2 = np.asarray(s2.state["u_hist"])
+    np.testing.assert_array_equal(uh2[:2], uh1[:2])
+    assert (uh2[2:] == -30.0).all()
+
+    s2.run(2)
+    s2.resize(6)
+    recs = s2.run()
+    assert [r.num_active for r in recs] == [6, 6, 6, 6]
+    assert all(np.isfinite(r.loss) for r in recs)
+
+
+def test_restore_master_bit_exact_for_narrow_param_dtypes(tmp_path):
+    """The master is float32 state; restoring it must not round-trip
+    through the model's (possibly bf16) param dtype — the restored master
+    is bit-exact with the saved one, while the workers re-seat at the
+    param dtype as a fresh run's would."""
+    ck = str(tmp_path / "ck")
+    lm = dict(arch="stablelm-3b", smoke=True, rounds=2, n_tokens=4000,
+              seq_len=16, batch_size=2)
+    s1 = ElasticSession(_spec(save_path=ck, **lm))
+    s1.run()
+    s2 = ElasticSession(_spec(seed=9, **lm))
+    s2.restore(ck)
+    _assert_trees_bit_exact(
+        jax.tree.map(np.asarray, s1.master_params),
+        jax.tree.map(np.asarray, s2.master_params))
+    w_dt = {x.dtype for x in jax.tree.leaves(s2.state["workers"])}
+    assert jnp.dtype(jnp.bfloat16) in w_dt  # workers stayed at param dtype
+    recs = s2.run()
+    assert all(np.isfinite(r.loss) for r in recs)
+
+
+def test_restore_rejects_arch_mismatch(tmp_path):
+    ck = str(tmp_path / "ck")
+    s1 = ElasticSession(_spec(save_path=ck))
+    s1.run()
+    s2 = ElasticSession(_spec(arch="stablelm-3b", smoke=True, rounds=2,
+                              n_tokens=4000, seq_len=16, batch_size=2))
+    with pytest.raises(ValueError, match="arch"):
+        s2.restore(ck)
+
+
+# ---------------------------------------------------------------------------
+# sharded placement under membership, real 4-device mesh (subprocess)
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_MEMBERSHIP = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys; sys.path.insert(0, "src")
+import jax
+import numpy as np
+from repro.api import ElasticSession, RunSpec
+from repro.configs.base import ElasticConfig, OptimizerConfig
+
+assert jax.device_count() == 4
+
+def run(placement):
+    ecfg = ElasticConfig(num_workers=4, capacity=8, tau=1, dynamic=True,
+                         failure_prob=0.3, comm_mode="fused",
+                         placement=placement, membership_scenario="plan",
+                         membership_plan=((2, 2), (4, 6)))
+    spec = RunSpec(arch="paper-cnn",
+                   optimizer=OptimizerConfig(name="sgd", lr=0.01),
+                   elastic=ecfg, rounds=6, rounds_per_call=2, seed=1,
+                   batch_size=4, n_data=96, n_test=32)
+    sess = ElasticSession(spec)
+    return sess, sess.run()
+
+s1, r1 = run("single")
+s2, r2 = run("sharded")
+assert s2.mesh.shape["pod"] == 4
+for a, b in zip(jax.tree.leaves(s1.master_params),
+                jax.tree.leaves(s2.master_params)):
+    assert np.array_equal(np.asarray(a), np.asarray(b)), "master not exact"
+for a, b in zip(r1, r2):
+    np.testing.assert_array_equal(a.h2, b.h2)
+    np.testing.assert_allclose(a.loss, b.loss, rtol=1e-6)
+assert [r.num_active for r in r2] == [4, 4, 2, 2, 6, 6]
+
+# uneven-shard masking: 3 live workers in a 4-slot pool over 4 pods
+ecfg = ElasticConfig(num_workers=3, capacity=4, tau=1, dynamic=True,
+                     comm_mode="fused", placement="sharded")
+spec = RunSpec(arch="paper-cnn",
+               optimizer=OptimizerConfig(name="sgd", lr=0.01),
+               elastic=ecfg, rounds=2, seed=0, batch_size=4,
+               n_data=96, n_test=32)
+sess = ElasticSession(spec)
+recs = sess.run()
+assert all(np.isfinite(r.loss) for r in recs)
+assert all(r.num_active == 3 for r in recs)
+print("MEMBERSHIP_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_membership_bit_exact_vs_single_4dev():
+    """On a forced 4-device host mesh, a capacity-8 pool resizing 4→2→6
+    produces sharded masters bit-exact with single placement, and an
+    uneven pool (3 live workers on 4 pods) runs end to end."""
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_MEMBERSHIP],
+                         cwd=ROOT, capture_output=True, text=True,
+                         timeout=540)
+    assert "MEMBERSHIP_OK" in out.stdout, out.stdout + out.stderr[-3000:]

@@ -12,15 +12,17 @@ def test_partition_invariants(n, k, r, seed):
     overlap, uniques = overlap_partition(n, k, r, seed)
     o = int(round(r * n))
     assert len(overlap) == o
-    per = (n - o) // k
-    # unique shards are disjoint, correctly sized, and disjoint from overlap
+    per, rem = divmod(n - o, k)
+    # unique shards are disjoint, near-equal (remainder dealt round-robin
+    # to the first `rem` workers), and disjoint from overlap
     all_u = np.concatenate(uniques) if k else np.array([])
     assert len(set(all_u.tolist())) == len(all_u)
     assert set(all_u.tolist()).isdisjoint(set(overlap.tolist()))
-    for s in uniques:
-        assert len(s) == per
-    # everything is a valid index
+    for j, s in enumerate(uniques):
+        assert len(s) == per + (1 if j < rem else 0)
+    # everything is a valid index, and D is fully covered: O ∪ ∪S_j = D
     assert all_u.max(initial=-1) < n and overlap.max(initial=-1) < n
+    assert len(all_u) + o == n
 
 
 @given(n=st.integers(100, 1000), k=st.integers(2, 8),
@@ -32,8 +34,35 @@ def test_worker_datasets_shared_fraction(n, k, r, seed):
     shared = set.intersection(*sets)
     # the shared subset is exactly the overlap O
     assert len(shared) == o
-    for d in ds:
-        assert len(d) == o + (n - o) // k
+    per, rem = divmod(n - o, k)
+    sizes = sorted(len(d) for d in ds)
+    assert sizes == sorted(o + per + (1 if j < rem else 0)
+                           for j in range(k))
+
+
+@pytest.mark.parametrize("n,k,seed", [
+    (100, 3, 0),   # 100 % 3 = 1 — the old split dropped it
+    (101, 4, 1),
+    (257, 7, 2),
+    (96, 4, 3),    # exact fit stays exact
+])
+def test_no_samples_dropped_without_overlap(n, k, seed):
+    """Regression (ISSUE-5 satellite): the old split dropped the
+    ``(n - o) % k`` remainder; with ratio=0 every index in D must be
+    assigned to exactly one worker."""
+    ds = worker_datasets(n, k, 0.0, seed)
+    union = np.concatenate(ds)
+    assert len(union) == n
+    np.testing.assert_array_equal(np.sort(union), np.arange(n))
+    assert max(len(d) for d in ds) - min(len(d) for d in ds) <= 1
+
+
+def test_overlap_stable_across_worker_counts():
+    """O depends only on (n, ratio, seed) — membership changes redeal the
+    unique shards but never move the shared overlap."""
+    o4, _ = overlap_partition(400, 4, 0.25, seed=5)
+    o7, _ = overlap_partition(400, 7, 0.25, seed=5)
+    np.testing.assert_array_equal(o4, o7)
 
 
 def test_partition_deterministic():

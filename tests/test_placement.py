@@ -245,6 +245,11 @@ out = dr.dryrun_one("qwen3_4b", "tiny_train", multi_pod=True)
 assert out["status"] == "ok", out
 assert out["lowered_kind"] == "elastic_round_step_sharded"
 assert out["devices"] == 4
+# capacity-padded pool (ISSUE-5): capacity 3 pads to 4 over the 2-way pod
+# axis and lowers the membership-masked round (active/join inputs)
+out = dr.dryrun_one("qwen3_4b", "tiny_train", multi_pod=True,
+                    elastic_capacity=3)
+assert out["status"] == "ok", out
 print("LOWERING_OK")
 """
 
