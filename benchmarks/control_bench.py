@@ -1,0 +1,207 @@
+"""Closed-loop control benchmark (ISSUE-6): detector-blind rule controller
+vs an oracle-scheduled controller vs open loop, across the failure
+scenarios.
+
+Three arms, identical weighting (EAHES dynamic weights), identical
+actuation surface (``ElasticSession.apply`` at chunk boundaries) — only
+the *information* driving membership differs:
+
+- ``open``   — no controller: failed slots stay in the pool and the
+  dynamic weighting alone defends the master (the paper's own regime).
+- ``oracle`` — :class:`OracleController`: ground-truth masks drive
+  evict-at-onset / readmit-at-recovery. The best membership control this
+  machinery can express; the reference the closed loop is scored against.
+- ``closed`` — ``RunSpec(controller="rules", detector_blind=True)``: the
+  ``repro.control`` loop running on observable telemetry only.
+
+Per scenario the record carries each arm's final master eval loss, the
+closed/oracle degradation, and the closed loop's recovery behaviour
+(detector flag delays vs true onsets, evictions, probe readmissions).
+Detection delay is measured *detector-side* (flag round − onset round) for
+failure episodes that begin while the slot is live; episodes that start
+while the slot is already evicted have no live telemetry to detect and are
+counted separately (``dark_onsets``).
+
+The run sizes mirror tests/test_control.py's acceptance runs: a
+deliberately separable regime (α=0.5, τ=4 — strong pullback makes a
+missing pullback visible; see repro/control/detector.py's calibration
+notes).
+"""
+import numpy as np
+
+
+class OracleController:
+    """Ground-truth membership control through the public actuation path.
+
+    Reads the scenario schedule's true fail mask (this file is a benchmark
+    — the no-oracle rule binds ``repro/control/*``, not the reference arms
+    that score it) and applies the ideal policy: evict a slot the chunk
+    after its failure starts, readmit it the chunk after it clears, never
+    emptying the pool.
+    """
+
+    def __init__(self, schedule):
+        self.schedule = schedule
+        self.evicted = set()
+        self.log = []
+
+    def on_round(self, record):
+        pass
+
+    def on_chunk_end(self, session):
+        from repro.control.actions import ControlAction
+
+        r = session.round - 1  # last completed round
+        if r < 0 or session.round >= session.spec.rounds:
+            return
+        fail = np.asarray(self.schedule.fail[r], bool)
+        act = np.asarray(session.active_mask, bool)
+        down = [i for i in range(len(fail)) if fail[i] and act[i]]
+        up = [i for i in sorted(self.evicted) if not fail[i]]
+        live = int(act.sum())
+        if down and live > 1:
+            down = down[:live - 1]
+            session.apply(ControlAction.evict(down, reason="oracle"))
+            self.evicted.update(down)
+            self.log.append((session.round, "evict", tuple(down)))
+        if up:
+            session.apply(ControlAction.readmit(up, reason="oracle"))
+            self.evicted.difference_update(up)
+            self.log.append((session.round, "readmit", tuple(up)))
+
+
+def control_spec(scenario, seed, *, rounds=20, controller=None,
+                 blind=False):
+    """The acceptance-regime RunSpec shared by bench and tests."""
+    from repro.api import RunSpec
+    from repro.configs.base import ElasticConfig, OptimizerConfig
+
+    ec = ElasticConfig(
+        num_workers=4, capacity=4, tau=4, alpha=0.5,
+        failure_prob=0.12, failure_scenario=scenario, crash_downtime=8)
+    return RunSpec(
+        arch="paper-cnn", smoke=True, elastic=ec,
+        optimizer=OptimizerConfig(name="sgd", lr=0.01),
+        rounds=rounds, rounds_per_call=1, seed=seed,
+        batch_size=4, n_data=96, n_test=32, eval_every=rounds,
+        controller=controller, detector_blind=blind)
+
+
+def final_eval(records):
+    for r in reversed(records):
+        if r.eval_loss is not None:
+            return float(r.eval_loss)
+    return float("nan")
+
+
+def fail_episodes(schedule, rounds):
+    """(slot, onset, end) of contiguous truly-failed runs in the truth
+    masks (end exclusive, clipped at ``rounds``)."""
+    f = np.asarray(schedule.fail[:rounds], bool)
+    eps = []
+    for i in range(f.shape[1]):
+        r = 0
+        while r < rounds:
+            if f[r, i]:
+                s = r
+                while r < rounds and f[r, i]:
+                    r += 1
+                eps.append((i, s, r))
+            else:
+                r += 1
+    return eps
+
+
+def closed_loop_metrics(session, rounds):
+    """Recovery metrics of a finished closed-loop session."""
+    from repro.control.detector import FAILED_SUSPECT
+
+    det = session.controller.detector
+    applied = [a for a in session.controller.actuator.log if a.applied]
+    evicts = [(a.round, s) for a in applied if a.action.kind == "evict"
+              for s in a.action.slots]
+    readmits = [(a.round, s) for a in applied if a.action.kind == "readmit"
+                for s in a.action.slots]
+    flags = [(r, slot) for (r, slot, v) in det.events
+             if v == FAILED_SUSPECT]
+    evicted_spans = []  # (slot, evict_round, readmit_round|rounds)
+    open_ev = {}
+    for r, s in evicts:
+        open_ev[s] = r
+    for r, s in readmits:
+        if s in open_ev:
+            evicted_spans.append((s, open_ev.pop(s), r))
+    evicted_spans += [(s, r, rounds) for s, r in
+                      ((s, r) for s, r in open_ev.items())]
+
+    def dark_at(slot, r):
+        return any(s == slot and a <= r < b for s, a, b in evicted_spans)
+
+    eps = fail_episodes(session.schedule, rounds)
+    delays, dark_onsets, missed = [], 0, 0
+    for slot, onset, end in eps:
+        if dark_at(slot, onset):
+            dark_onsets += 1  # already out of the pool: nothing to detect
+            continue
+        hit = [r for r, s in flags if s == slot and onset <= r < end + 2]
+        if hit:
+            delays.append(hit[0] - onset)
+        else:
+            missed += 1
+    return {
+        "episodes": len(eps), "dark_onsets": dark_onsets,
+        "missed": missed, "flag_delays": delays,
+        "evictions": len(evicts), "readmissions": len(readmits),
+        "final_live": int(session.num_active),
+    }
+
+
+def bench_control(scenarios=("iid", "burst", "correlated", "crash_restart",
+                             "straggler"), seeds=(1, 2, 3), rounds=20):
+    from repro.api import ElasticSession
+
+    out = {"what": "control", "workers": 4, "tau": 4, "alpha": 0.5,
+           "failure_prob": 0.12, "crash_downtime": 8, "rounds": rounds,
+           "seeds": list(seeds), "scenarios": {}}
+    for scenario in scenarios:
+        rows = []
+        for seed in seeds:
+            sess_open = ElasticSession(control_spec(scenario, seed,
+                                                    rounds=rounds))
+            loss_open = final_eval(sess_open.run())
+
+            sess_orc = ElasticSession(control_spec(scenario, seed,
+                                                   rounds=rounds))
+            orc = OracleController(sess_orc.schedule)
+            sess_orc.add_observer(orc)
+            loss_orc = final_eval(sess_orc.run())
+
+            sess_cl = ElasticSession(control_spec(
+                scenario, seed, rounds=rounds, controller="rules",
+                blind=True))
+            loss_cl = final_eval(sess_cl.run())
+            met = closed_loop_metrics(sess_cl, rounds)
+            met.update({
+                "seed": seed, "loss_open": loss_open,
+                "loss_oracle": loss_orc, "loss_closed": loss_cl,
+                "deg_vs_oracle_pct": ((loss_cl - loss_orc)
+                                      / abs(loss_orc) * 100
+                                      if loss_orc else float("nan")),
+                "oracle_actions": len(orc.log),
+            })
+            rows.append(met)
+        mean_deg = float(np.mean([r["deg_vs_oracle_pct"] for r in rows]))
+        all_delays = [d for r in rows for d in r["flag_delays"]]
+        out["scenarios"][scenario] = {
+            "runs": rows,
+            "mean_deg_vs_oracle_pct": mean_deg,
+            "max_flag_delay": (max(all_delays) if all_delays else None),
+            "missed_total": sum(r["missed"] for r in rows),
+        }
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(bench_control(), indent=1))

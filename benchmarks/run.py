@@ -7,7 +7,11 @@ per-round time at k ∈ {4, 8} (force a multi-device host with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the worker
 shards actually spread), and ``--what membership`` a JSON record measuring
 the capacity-padding overhead of the elastic worker pool (k ∈ {4, 8} live
-workers at capacity ∈ {8, 16} vs an exact-fit pool)."""
+workers at capacity ∈ {8, 16} vs an exact-fit pool), and ``--what
+control`` a JSON record scoring the detector-blind closed-loop controller
+against an oracle-scheduled controller and the open loop across the
+failure scenarios (recovery delay, evictions/readmissions, master-loss
+degradation)."""
 import argparse
 import json
 
@@ -17,7 +21,7 @@ def main(argv=None) -> None:
     ap.add_argument("--what", default="all",
                     choices=["all", "kernels", "comm_modes", "paper",
                              "roofline", "session", "placement",
-                             "membership"])
+                             "membership", "control"])
     args = ap.parse_args(argv)
 
     if args.what == "session":
@@ -36,6 +40,12 @@ def main(argv=None) -> None:
         from benchmarks import session_bench
 
         print(json.dumps(session_bench.bench_session_membership()))
+        return
+
+    if args.what == "control":
+        from benchmarks import control_bench
+
+        print(json.dumps(control_bench.bench_control()))
         return
 
     from benchmarks import (kernels_bench, paper_figs, roofline_bench,

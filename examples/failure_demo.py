@@ -10,6 +10,16 @@ scenario engine (``repro.core.scenarios``) by name:
     PYTHONPATH=src python examples/failure_demo.py
     PYTHONPATH=src python examples/failure_demo.py --scenario burst
     PYTHONPATH=src python examples/failure_demo.py --scenario crash_restart
+
+``--controller rules`` (ISSUE-6) closes the loop: the failure detector
+watches the same u/loss telemetry this demo prints — never the ground-truth
+masks — and the rule policy evicts suspect slots and probes them back in.
+The per-round table gains a live-pool column and the demo ends with the
+controller's action journal, so you can line up each eviction against the
+drift that triggered it:
+
+    PYTHONPATH=src python examples/failure_demo.py \
+        --scenario crash_restart --controller rules --workers 4
 """
 import argparse
 
@@ -36,7 +46,12 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=14)
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--controller", default="none",
+                    choices=("none", "rules"),
+                    help="'rules' closes the loop: detector verdicts drive "
+                         "evict/readmit through ElasticSession.apply")
     args = ap.parse_args(argv)
+    controller = None if args.controller == "none" else args.controller
 
     ecfg = ElasticConfig(num_workers=args.workers, tau=1, alpha=0.1,
                          overlap_ratio=0.25, dynamic=True,
@@ -49,18 +64,28 @@ def main(argv=None):
         elastic=ecfg, rounds=args.rounds, seed=args.seed,
         schedule=(outage_schedule(args.rounds, args.workers)
                   if args.scenario == "outage" else None),
-        batch_size=32, n_data=2000, n_test=300, eval_every=1)
+        batch_size=32, n_data=2000, n_test=300, eval_every=1,
+        controller=controller)
     sess = ElasticSession(spec)
 
+    pool = " | live" if controller else ""
     print(f"scenario={args.scenario}  (F=comm fail, S=straggle, R=restart; "
           f"worker-0 column shown)")
-    print(" rnd | F S R |      u0      a0     h1_0   h2_0 |  master_acc")
+    print(f" rnd | F S R |      u0      a0     h1_0   h2_0 |  master_acc"
+          f"{pool}")
     for rec in sess.run_iter():
+        pool = (f" | {rec.num_active}/{sess.capacity}" if controller else "")
         print(f"  {rec.round:2d} | {int(rec.fail[0])} "
               f"{int(rec.straggle[0])} {int(rec.restart[0])} "
               f"| {float(rec.u[0]):8.3f} {float(rec.score[0]):8.4f} "
               f"{float(rec.h1[0]):6.3f} {float(rec.h2[0]):6.3f} |"
-              f"    {rec.eval_acc:.3f}")
+              f"    {rec.eval_acc:.3f}{pool}")
+    if sess.controller is not None:
+        applied = [a for a in sess.controller.actuator.log if a.applied]
+        print(f"\ncontroller journal ({len(applied)} applied):")
+        for a in applied:
+            print(f"  round {a.round}: {a.action.describe()} "
+                  f"-> {a.live_after} live")
 
     print("\nWhile a worker is cut off (or straggling) its u drifts; when it "
           "reconnects — or rejoins reset to the master after a crash — the "

@@ -27,8 +27,18 @@ Exports (see docs/paper_map.md for the full paper→code table):
   single-device simulation).
 - :class:`RoundRecord` — one communication round materialized on the host:
   the §V-B diagnostics (u = log-distance, raw score a, h1/h2 weights) plus
-  the schedule row and optional held-out master metrics (the §VI curves).
+  the schedule row, host-measured round/dispatch wall time, and optional
+  held-out master metrics (the §VI curves).
+- :class:`ControlAction` / :class:`MembershipPolicy` /
+  :class:`SessionObserver` — the closed-loop control surface (ISSUE-6,
+  beyond-paper): typed membership edits executed by
+  ``ElasticSession.apply``, the policy plug-in base mapping detector
+  verdicts to actions, and the observer protocol controllers and user
+  callbacks attach through (``RunSpec.controller`` / ``add_observer``).
 """
 from repro.api.session import ElasticSession, RoundRecord, RunSpec
+from repro.control.actions import ControlAction, SessionObserver
+from repro.control.policy import MembershipPolicy
 
-__all__ = ["ElasticSession", "RoundRecord", "RunSpec"]
+__all__ = ["ElasticSession", "RoundRecord", "RunSpec",
+           "ControlAction", "MembershipPolicy", "SessionObserver"]

@@ -47,10 +47,25 @@ echoes the live mask in every :class:`RoundRecord`. ``resize()`` /
 ``restore()`` warm-starts a session — possibly at a *different* capacity —
 from a checkpoint's master, re-seating the saved live slots' u-histories
 and cold-starting any extra joiners from the master, EASGD-style.
+
+Closed-loop control (ISSUE-6): live control is now a typed, single-entry
+surface — ``apply(ControlAction)`` executes one membership edit (the old
+``resize()``/``set_membership()`` delegate to it and emit
+``DeprecationWarning``). Observers (:class:`SessionObserver`) attach via
+``add_observer`` or ``RunSpec.controller``; they see every
+:class:`RoundRecord` (``on_round``) and get a mutation window between jit
+chunks (``on_chunk_end``), which is where the rule controller
+(``repro.control``) closes the detect→decide→act loop.
+``RunSpec(detector_blind=True)`` echoes a mask-zeroed schedule view into
+the records so a controller provably runs on observable telemetry only;
+each record also carries host-measured ``round_ms``/``dispatch_ms``, the
+step-time outlier signal.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from typing import Iterator, List, Optional
 
 import jax
@@ -58,6 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpoint
+from repro.control.actions import ControlAction, SessionObserver
 from repro.configs.base import (ElasticConfig, ModelConfig, OptimizerConfig,
                                 get_config)
 from repro.core.coordinator import ElasticTrainer, RoundInputs
@@ -110,6 +126,9 @@ class RunSpec:
     eval_every: int = 0  # 0 = never; >0 = every e rounds + the final round
     save_path: Optional[str] = None
     use_pallas: bool = False
+    # closed-loop control (ISSUE-6)
+    controller: Optional[str] = None  # None = open loop; "rules" = RuleController
+    detector_blind: bool = False  # echo mask-zeroed schedule into records
 
     def __post_init__(self):
         for name in ("rounds", "rounds_per_call", "batch_size", "seq_len",
@@ -129,6 +148,18 @@ class RunSpec:
                 raise ValueError(
                     f"RunSpec.schedule shape {self.schedule.fail.shape} != "
                     f"(rounds, capacity) = {want}")
+        if self.controller is not None:
+            if self.controller != "rules":
+                raise ValueError(
+                    f"RunSpec.controller must be None or 'rules', got "
+                    f"{self.controller!r}")
+            if self.plain:
+                raise ValueError(
+                    "RunSpec: plain mode has no worker pool to control")
+        if self.detector_blind and self.elastic.oracle:
+            raise ValueError(
+                "RunSpec: detector_blind contradicts ElasticConfig.oracle — "
+                "the oracle weighting itself reads the ground-truth masks")
 
     def replace(self, **kw) -> "RunSpec":
         return dataclasses.replace(self, **kw)
@@ -142,9 +173,16 @@ class RoundRecord:
     diagnostics (zeros in plain mode and for vacant slots);
     ``fail``/``straggle``/``restart`` echo the schedule row that drove the
     round and ``active`` the live-membership mask (all-True for fixed-k
-    runs). ``eval_loss``/``eval_acc`` are the master's held-out metrics,
-    populated only on eval rounds (``eval_acc`` only for model families
-    that define ``accuracy``).
+    runs); under ``RunSpec.detector_blind`` the echoed event masks are
+    all-False (the truth still drives the run — see
+    ``ScenarioSchedule.blind``). ``eval_loss``/``eval_acc`` are the
+    master's held-out metrics, populated only on eval rounds (``eval_acc``
+    only for model families that define ``accuracy``). ``loss_w`` is the
+    (cap,) per-slot mean local-phase loss (``None`` in plain mode);
+    ``round_ms`` is host wall time attributed to this round (its chunk's
+    wall time / rounds in the chunk) and ``dispatch_ms`` the chunk's
+    dispatch latency (jit-call return before materialization) — both are
+    chunk-grained, repeated on each record of the chunk.
     """
 
     round: int
@@ -159,6 +197,9 @@ class RoundRecord:
     eval_loss: Optional[float] = None
     eval_acc: Optional[float] = None
     active: Optional[np.ndarray] = None
+    loss_w: Optional[np.ndarray] = None
+    round_ms: float = 0.0
+    dispatch_ms: float = 0.0
 
     @property
     def num_active(self) -> int:
@@ -259,6 +300,19 @@ class ElasticSession:
                         spec.rounds, self.capacity, ecfg.num_workers))
             self._failed_recent = self.schedule.failed_recent_all()
             self._refresh_membership()
+        # -- observers / controller (ISSUE-6) -------------------------------
+        # detector-blind runs echo a mask-zeroed schedule view into records;
+        # the real schedule still drives RoundInputs
+        self._echo = (self.schedule.blind()
+                      if (not spec.plain and spec.detector_blind)
+                      else self.schedule)
+        self._observers: List[SessionObserver] = []
+        self.controller = None
+        if spec.controller is not None:
+            from repro.control.actuator import make_controller
+
+            self.controller = make_controller(spec.controller, self.capacity)
+            self.add_observer(self.controller)
         # -- state ----------------------------------------------------------
         if spec.plain:
             self.state = init_train_state(self.model, spec.optimizer,
@@ -323,13 +377,13 @@ class ElasticSession:
     def num_active(self) -> int:
         return int(self._active.sum())
 
-    def set_membership(self, mask) -> None:
-        """Live membership change between ``run`` calls: the given (cap,)
-        bool mask becomes the pool for every remaining round (overriding
-        the scheduled stream from here on). Newly activated slots join at
-        the next round, cold-started from the master. With a fixed-k spec
-        (no membership stream) the first call materializes one, which
-        retraces the jitted round once — capacity-padded specs
+    def _set_membership(self, mask: np.ndarray) -> None:
+        """Live membership change between chunks: the given (cap,) bool
+        mask becomes the pool for every remaining round (overriding the
+        scheduled stream from here on). Newly activated slots join at the
+        next round, cold-started from the master. With a fixed-k spec (no
+        membership stream) the first call materializes one, which retraces
+        the jitted round once — capacity-padded specs
         (``capacity > num_workers`` or a membership scenario) pay nothing.
         """
         if self.spec.plain:
@@ -353,10 +407,10 @@ class ElasticSession:
         self._refresh_membership()
         self._apply_membership(mask)
 
-    def resize(self, k: int) -> None:
-        """Live pool resize to ``k`` workers: growing activates the
-        lowest-numbered vacant slots (joiners, cold-started from the
-        master); shrinking retires the highest-numbered live slots."""
+    def _resize(self, k: int) -> None:
+        """Pool resize to ``k``: growing activates the lowest-numbered
+        vacant slots (joiners, cold-started from the master); shrinking
+        retires the highest-numbered live slots."""
         if self.spec.plain:
             raise ValueError("plain mode has no worker pool to resize")
         if not 1 <= k <= self.capacity:
@@ -369,7 +423,73 @@ class ElasticSession:
             mask[vacant[:k - len(live)]] = True
         elif k < len(live):
             mask[live[k:]] = False
-        self.set_membership(mask)
+        self._set_membership(mask)
+
+    def apply(self, action: ControlAction) -> None:
+        """The single live-control entrypoint (ISSUE-6): execute one
+        :class:`ControlAction` against the pool. Legal between ``run``
+        calls and inside ``on_chunk_end`` observer hooks (membership is
+        baked into each jit chunk, so mid-chunk edits are impossible by
+        construction). ``evict`` requires its slots live, ``readmit``
+        requires them vacant — slot state is part of the action's meaning,
+        so a stale action errors instead of silently half-applying (the
+        controller's :class:`~repro.control.actuator.Actuator` journals and
+        re-scopes stale actions before calling this).
+        """
+        if not isinstance(action, ControlAction):
+            raise TypeError(
+                f"ElasticSession.apply expects a ControlAction, got "
+                f"{type(action).__name__}")
+        if action.kind == "noop":
+            return
+        if action.kind == "resize":
+            self._resize(action.k)
+            return
+        if action.kind == "set_membership":
+            self._set_membership(action.mask)
+            return
+        if self.spec.plain:
+            raise ValueError("plain mode has no worker pool to resize")
+        bad = [s for s in action.slots if not 0 <= s < self.capacity]
+        if bad:
+            raise ValueError(
+                f"{action.kind} slots {bad} outside 0..{self.capacity - 1}")
+        mask = self._active.copy()
+        if action.kind == "evict":
+            dead = [s for s in action.slots if not mask[s]]
+            if dead:
+                raise ValueError(f"cannot evict vacant slots {dead}")
+            mask[list(action.slots)] = False
+        else:  # readmit
+            live = [s for s in action.slots if mask[s]]
+            if live:
+                raise ValueError(f"cannot readmit live slots {live}")
+            mask[list(action.slots)] = True
+        self._set_membership(mask)
+
+    def set_membership(self, mask) -> None:
+        """Deprecated: use ``apply(ControlAction.set_membership(mask))``."""
+        warnings.warn(
+            "ElasticSession.set_membership() is deprecated; use "
+            "apply(ControlAction.set_membership(mask))",
+            DeprecationWarning, stacklevel=2)
+        self._set_membership(mask)
+
+    def resize(self, k: int) -> None:
+        """Deprecated: use ``apply(ControlAction.resize(k))``."""
+        warnings.warn(
+            "ElasticSession.resize() is deprecated; use "
+            "apply(ControlAction.resize(k))",
+            DeprecationWarning, stacklevel=2)
+        self._resize(k)
+
+    # -- observers -----------------------------------------------------------
+    def add_observer(self, observer: SessionObserver) -> None:
+        """Attach an observer: ``on_round(record)`` fires for every
+        completed round, ``on_chunk_end(session)`` between jit chunks (the
+        mutation window — the only place ``apply`` is called by a
+        controller). Both hooks are optional; missing ones are skipped."""
+        self._observers.append(observer)
 
     # -- eval ---------------------------------------------------------------
     @property
@@ -501,6 +621,7 @@ class ElasticSession:
         active = (self._membership[lo:hi] if self._membership is not None
                   else None)
         join = self._join_rows[lo:hi] if self._join_rows is not None else None
+        t0 = time.perf_counter()
         if n == 1:
             inputs = RoundInputs(
                 batches={k: jnp.asarray(v[0]) for k, v in stacked.items()},
@@ -515,6 +636,7 @@ class ElasticSession:
             step = (self.trainer.round_step_sharded if self._sharded
                     else self.trainer.round_step)
             self.state, m = step(self.state, inputs)
+            t1 = time.perf_counter()
             m = jax.tree.map(lambda x: np.asarray(x)[None], m)
         else:
             inputs = RoundInputs(
@@ -529,8 +651,15 @@ class ElasticSession:
             chunk = (self.trainer.round_chunk_sharded if self._sharded
                      else self.trainer.round_chunk)
             self.state, m = chunk(self.state, inputs)
+            t1 = time.perf_counter()
             m = jax.tree.map(np.asarray, m)
+        # materializing m above synced the chunk, so t2 - t0 is its wall
+        # time; t1 - t0 is the async-dispatch latency (jit-call return)
+        t2 = time.perf_counter()
+        round_ms = (t2 - t0) * 1e3 / n
+        dispatch_ms = (t1 - t0) * 1e3
         self.round = hi
+        echo = self._echo
         records = []
         for i, r in enumerate(range(lo, hi)):
             ev_loss = ev_acc = None
@@ -540,11 +669,13 @@ class ElasticSession:
                 round=r, loss=float(m["loss"][i]),
                 u=m["u"][i], score=m["score"][i],
                 h1=m["h1"][i], h2=m["h2"][i],
-                fail=sched.fail[r], straggle=sched.straggle[r],
-                restart=sched.restart[r],
+                fail=echo.fail[r], straggle=echo.straggle[r],
+                restart=echo.restart[r],
                 eval_loss=ev_loss, eval_acc=ev_acc,
                 active=(self._membership[r] if self._membership is not None
-                        else np.ones(self.capacity, bool))))
+                        else np.ones(self.capacity, bool)),
+                loss_w=m["loss_w"][i],
+                round_ms=round_ms, dispatch_ms=dispatch_ms))
         return records
 
     def _run_chunk_plain(self, n: int) -> List[RoundRecord]:
@@ -553,8 +684,13 @@ class ElasticSession:
         # WorkerBatcher emits (τ=1, k=1, B, ...); drop the unit axes
         xs = ({k: jnp.asarray(v[:, 0, 0]) for k, v in stacked.items()},
               jnp.stack([self._round_rng(r) for r in range(lo, hi)]))
+        t0 = time.perf_counter()
         self.state, m = self._plain_chunk(self.state, xs)
+        t1 = time.perf_counter()
         loss = np.asarray(m["loss"])
+        t2 = time.perf_counter()
+        round_ms = (t2 - t0) * 1e3 / n
+        dispatch_ms = (t1 - t0) * 1e3
         self.round = hi
         z = np.zeros(1, np.float32)
         zb = np.zeros(1, bool)
@@ -566,7 +702,8 @@ class ElasticSession:
             records.append(RoundRecord(
                 round=r, loss=float(loss[i]), u=z, score=z, h1=z, h2=z,
                 fail=zb, straggle=zb, restart=zb,
-                eval_loss=ev_loss, eval_acc=ev_acc, active=~zb))
+                eval_loss=ev_loss, eval_acc=ev_acc, active=~zb,
+                round_ms=round_ms, dispatch_ms=dispatch_ms))
         return records
 
     def run_iter(self, rounds: Optional[int] = None
@@ -583,7 +720,20 @@ class ElasticSession:
         run_chunk = (self._run_chunk_plain if self.spec.plain
                      else self._run_chunk_elastic)
         while self.round < end:
-            yield from run_chunk(self._next_chunk(end))
+            records = run_chunk(self._next_chunk(end))
+            # observers run before the next chunk is built: on_chunk_end is
+            # the mutation window where a controller may apply() membership
+            # edits that the following chunk then executes under
+            for obs in self._observers:
+                on_round = getattr(obs, "on_round", None)
+                if on_round is not None:
+                    for rec in records:
+                        on_round(rec)
+            for obs in self._observers:
+                on_chunk_end = getattr(obs, "on_chunk_end", None)
+                if on_chunk_end is not None:
+                    on_chunk_end(self)
+            yield from records
         if self.round >= self.spec.rounds and self.spec.save_path:
             self.save()
 

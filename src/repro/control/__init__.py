@@ -1,0 +1,22 @@
+"""Closed-loop elastic control: detector → policy → actuator (ISSUE-6).
+
+Infers worker failures/stragglers from observable telemetry only (no
+ground-truth masks — enforced by ``tests/test_control.py``) and drives the
+session's live membership through typed :class:`ControlAction` values.
+"""
+from repro.control.actions import ControlAction, SessionObserver
+from repro.control.actuator import (Actuator, AppliedAction, RuleController,
+                                    make_controller)
+from repro.control.detector import (FAILED_SUSPECT, HEALTHY,
+                                    STRAGGLER_SUSPECT, VERDICTS,
+                                    DetectorConfig, FailureDetector)
+from repro.control.policy import (MembershipPolicy, PolicyConfig, RulePolicy,
+                                  make_policy)
+
+__all__ = [
+    "ControlAction", "SessionObserver",
+    "DetectorConfig", "FailureDetector",
+    "HEALTHY", "STRAGGLER_SUSPECT", "FAILED_SUSPECT", "VERDICTS",
+    "MembershipPolicy", "PolicyConfig", "RulePolicy", "make_policy",
+    "Actuator", "AppliedAction", "RuleController", "make_controller",
+]

@@ -305,18 +305,26 @@ class ElasticTrainer:
                 active_f = live
             else:
                 active_f = jnp.ones_like(loss, bool)
-            return (new_p, new_o), (jnp.sum(loss), jnp.sum(active_f))
+            return ((new_p, new_o),
+                    (jnp.sum(loss), jnp.sum(active_f), loss, active_f))
 
         rngs = jax.random.split(rng, tau)
-        (workers, opt_state), (losses, counts) = jax.lax.scan(
-            tau_step, (state["workers"], state["opt"]),
-            (batches, rngs, jnp.arange(tau)))
+        (workers, opt_state), (losses, counts, loss_steps, live_steps) = (
+            jax.lax.scan(tau_step, (state["workers"], state["opt"]),
+                         (batches, rngs, jnp.arange(tau))))
         sum_loss, n_active = jnp.sum(losses), jnp.sum(counts)
         if axis is not None:
             # one collective for the whole phase: metric totals only
             sum_loss, n_active = jax.lax.psum((sum_loss, n_active), axis)
         mean_loss = sum_loss / jnp.maximum(n_active, 1)
-        return dict(state, workers=workers, opt=opt_state), mean_loss
+        # per-slot mean loss over each slot's *live* steps (frozen straggler
+        # tails and vacancies excluded) — the controller's progress signal.
+        # Slot-local, so it needs no collective under sharded placement.
+        # The scalar mean-loss reduction above is kept verbatim: loss_w is
+        # an additional scan output, not a re-association of that metric.
+        loss_w = (jnp.sum(loss_steps, axis=0)
+                  / jnp.maximum(jnp.sum(live_steps, axis=0), 1))
+        return dict(state, workers=workers, opt=opt_state), mean_loss, loss_w
 
     # -- communication phase -----------------------------------------------------
     def comm_phase(self, state, fail_mask, failed_recent=None, straggle=None,
@@ -468,14 +476,15 @@ class ElasticTrainer:
                       else jnp.logical_or(reseat, inputs.join))
         if reseat is not None:
             state = self.apply_restarts(state, reseat)
-        state, loss = self.local_phase(state, inputs.batches, inputs.rng,
-                                       inputs.straggle, inputs.active,
-                                       axis=axis)
+        state, loss, loss_w = self.local_phase(state, inputs.batches,
+                                               inputs.rng, inputs.straggle,
+                                               inputs.active, axis=axis)
         state, metrics = self.comm_phase(state, inputs.fail,
                                          inputs.failed_recent,
                                          inputs.straggle, inputs.active,
                                          axis=axis)
         metrics["loss"] = loss
+        metrics["loss_w"] = loss_w
         return state, metrics
 
     @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
@@ -538,7 +547,7 @@ class ElasticTrainer:
             straggle=mask(inputs.straggle), restart=mask(inputs.restart),
             active=mask(inputs.active), join=mask(inputs.join))
         met_spec = {"u": wrk, "score": wrk, "h1": wrk, "h2": wrk,
-                    "loss": rep}
+                    "loss": rep, "loss_w": wrk}
         return state_spec, in_spec, met_spec
 
     def _round_sharded(self, state, inputs: RoundInputs, chunk: bool):

@@ -137,6 +137,20 @@ class ScenarioSchedule:
         out[1:] = ~self.active[1:] & self.active[:-1]
         return out
 
+    def blind(self) -> "ScenarioSchedule":
+        """Detector-blind view: same shape/membership, all ground-truth
+        event masks zeroed (ISSUE-6).
+
+        ``RunSpec(detector_blind=True)`` echoes this view — not the real
+        schedule — into every ``RoundRecord``, so nothing downstream of the
+        session can read which slots truly failed, straggled or restarted;
+        the truth still drives the run itself. ``active`` is kept: live
+        membership is the session's *own* output (the controller decided
+        it), not an oracle input.
+        """
+        z = np.zeros_like(self.fail)
+        return dataclasses.replace(self, fail=z, straggle=z, restart=z)
+
     def failed_recent(self, r: int) -> np.ndarray:
         """(k,) bool — the worker's sync was suppressed in the *previous*
         round (r−1; all-False at r=0).

@@ -21,6 +21,13 @@ without TPUs (with one device, sharded runs on a 1-way pod axis).
 live (``--membership-scenario`` / ``--membership-plan "2:2,4:6"``) with
 zero recompiles; under sharded placement capacity is padded to a multiple
 of the pod axis and the extra slots stay inactive.
+
+Closed-loop control (ISSUE-6): ``--controller rules`` attaches the
+detector→policy→actuator loop (``repro.control``) — suspect slots are
+evicted and probed back in at chunk boundaries, from observable telemetry
+only. ``--detector-blind`` additionally zeroes the ground-truth event masks
+echoed into the printed records, so what you see is exactly what the
+controller saw.
 """
 from __future__ import annotations
 
@@ -87,6 +94,15 @@ def main(argv=None):
                          "device, or shard_map the worker axis over the "
                          "mesh's 'pod' axis (requires --comm-mode fused; "
                          "k must divide over the device count)")
+    ap.add_argument("--controller", default="none",
+                    choices=("none", "rules"),
+                    help="closed-loop membership control (repro.control): "
+                         "'rules' runs the failure detector + rule policy "
+                         "and applies evict/readmit at chunk boundaries")
+    ap.add_argument("--detector-blind", action="store_true",
+                    help="echo a mask-zeroed schedule view into records "
+                         "(the controller never sees ground truth anyway; "
+                         "this blinds the printed records too)")
     ap.add_argument("--elastic", action="store_true", default=True)
     ap.add_argument("--plain", dest="elastic", action="store_false")
     ap.add_argument("--seed", type=int, default=0)
@@ -142,7 +158,9 @@ def main(argv=None):
         rounds_per_call=args.rounds_per_call, seed=args.seed,
         plain=not args.elastic, batch_size=args.batch_size,
         seq_len=args.seq_len, n_data=8000, n_test=1000,
-        data_seed=args.data_seed, save_path=args.save)
+        data_seed=args.data_seed, save_path=args.save,
+        controller=(None if args.controller == "none" else args.controller),
+        detector_blind=args.detector_blind)
     sess = ElasticSession(spec)
 
     t0 = time.time()
@@ -151,7 +169,7 @@ def main(argv=None):
             print(f"step {rec.round}: loss={rec.loss:.4f}", flush=True)
             continue
         extra = ""
-        if sess.schedule.has_membership:
+        if sess.schedule.has_membership or sess.controller is not None:
             extra += f" k={rec.num_active}/{sess.capacity}"
         if sess.schedule.has_stragglers:
             extra += f" straggle={rec.straggle.astype(int).tolist()}"
@@ -162,6 +180,12 @@ def main(argv=None):
               f"score={np.asarray(rec.score).round(3).tolist()} "
               f"h2={np.asarray(rec.h2).round(3).tolist()}{extra} "
               f"({time.time()-t0:.1f}s)", flush=True)
+    if sess.controller is not None:
+        applied = [a for a in sess.controller.actuator.log if a.applied]
+        print(f"[control] {len(applied)} membership action(s) applied:")
+        for a in applied:
+            print(f"[control]   round {a.round}: {a.action.describe()} "
+                  f"-> {a.live_after} live")
     if args.save:
         print(f"saved master params to {args.save}")
 

@@ -103,8 +103,9 @@ def test_local_phase_trains_each_worker_independently():
     state = tr.init_state(jax.random.key(0))
     b = {"images": jax.random.normal(jax.random.key(1), (2, 2, 8, 28, 28, 1)),
          "labels": jnp.zeros((2, 2, 8), jnp.int32)}
-    new, loss = tr.local_phase(state, b, jax.random.key(2))
+    new, loss, loss_w = tr.local_phase(state, b, jax.random.key(2))
     assert bool(jnp.isfinite(loss))
+    assert loss_w.shape == (2,) and bool(jnp.all(jnp.isfinite(loss_w)))
     # workers diverge (different data), master untouched
     w0 = jax.tree.leaves(_get(new["workers"], 0))
     w1 = jax.tree.leaves(_get(new["workers"], 1))

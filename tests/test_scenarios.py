@@ -280,11 +280,11 @@ def test_straggler_runs_reduced_effective_tau():
     tr = _trainer(k=2, tau=4)
     state = tr.init_state(jax.random.key(0))
     b = _img_batches(4, 2)
-    full, _ = tr.local_phase(state, b, jax.random.key(1))
-    half, _ = tr.local_phase(state, b, jax.random.key(1),
-                             straggle=jnp.asarray([True, False]))
+    full, _, _ = tr.local_phase(state, b, jax.random.key(1))
+    half, _, _ = tr.local_phase(state, b, jax.random.key(1),
+                                straggle=jnp.asarray([True, False]))
     trunc = {key: v[:2] for key, v in b.items()}  # τ_eff = 4·0.5 = 2
-    want, _ = tr.local_phase(state, trunc, jax.random.key(1))
+    want, _, _ = tr.local_phase(state, trunc, jax.random.key(1))
     for got, w, f in zip(jax.tree.leaves(half["workers"]),
                          jax.tree.leaves(want["workers"]),
                          jax.tree.leaves(full["workers"])):
@@ -295,8 +295,8 @@ def test_straggler_runs_reduced_effective_tau():
     # at τ=1 the floor keeps every worker taking at least one step
     tr1 = _trainer(k=2, tau=1)
     s1 = tr1.init_state(jax.random.key(0))
-    out, _ = tr1.local_phase(s1, _img_batches(1, 2), jax.random.key(1),
-                             straggle=jnp.asarray([True, False]))
+    out, _, _ = tr1.local_phase(s1, _img_batches(1, 2), jax.random.key(1),
+                                straggle=jnp.asarray([True, False]))
     assert any((np.asarray(a) != np.asarray(b)).any() for a, b in
                zip(jax.tree.leaves(out["workers"]),
                    jax.tree.leaves(s1["workers"])))
