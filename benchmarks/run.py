@@ -11,7 +11,11 @@ workers at capacity ∈ {8, 16} vs an exact-fit pool), and ``--what
 control`` a JSON record scoring the detector-blind closed-loop controller
 against an oracle-scheduled controller and the open loop across the
 failure scenarios (recovery delay, evictions/readmissions, master-loss
-degradation)."""
+degradation), and ``--what local`` a JSON record comparing the plain
+vmapped local phase against the fused local phase (ISSUE-7: shared
+gradient/HVP linearization + batched multi-worker AdaHessian update) at
+k ∈ {4, 8} — the jnp-fused row is the CPU win, the interpret-mode Pallas
+row records that path's (expected, large) CPU overhead."""
 import argparse
 import json
 
@@ -19,10 +23,16 @@ import json
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--what", default="all",
-                    choices=["all", "kernels", "comm_modes", "paper",
-                             "roofline", "session", "placement",
+                    choices=["all", "kernels", "comm_modes", "local",
+                             "paper", "roofline", "session", "placement",
                              "membership", "control"])
     args = ap.parse_args(argv)
+
+    if args.what == "local":
+        from benchmarks import kernels_bench
+
+        print(json.dumps(kernels_bench.bench_local()))
+        return
 
     if args.what == "session":
         from benchmarks import session_bench

@@ -228,6 +228,14 @@ class ElasticSession:
     def __init__(self, spec: RunSpec, mesh=None):
         self.spec = spec
         cfg = spec.model_cfg or get_config(spec.arch, smoke=spec.smoke)
+        if cfg.use_pallas != spec.use_pallas:
+            # RunSpec.use_pallas is the single source of truth (ISSUE-7):
+            # the flag also exists on ModelConfig (it gates model-internal
+            # kernels like flash attention), and a preset/model_cfg that
+            # disagrees with the spec would silently split the run into
+            # half-kernel/half-jnp execution. Coerce the model config so
+            # one flag drives every kernel path.
+            cfg = dataclasses.replace(cfg, use_pallas=spec.use_pallas)
         self.model_cfg = cfg
         self.model = build_model(cfg)
         ecfg = spec.elastic

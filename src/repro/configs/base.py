@@ -67,7 +67,10 @@ class ModelConfig:
     param_dtype: str = "bfloat16"
     # misc
     source: str = ""  # citation
-    # pallas kernels on/off (TPU path)
+    # pallas kernels on/off (TPU path) for model-internal kernels (flash
+    # attention). Inside an ElasticSession, RunSpec.use_pallas is the single
+    # source of truth: the session coerces this field to match the spec, so
+    # one flag drives both the model and the trainer kernel paths (ISSUE-7).
     use_pallas: bool = False
     # sequence-mix chunk size for SSD/RWKV chunked scans
     scan_chunk: int = 256
@@ -159,6 +162,16 @@ class ElasticConfig:
     # event-order-equivalent weights, workers sync against the round-start
     # master (delayed averaging à la DaSGD).
     comm_mode: str = "sequential"     # sequential | fused
+    # Delayed averaging depth (DaSGD; ISSUE-7). 0 = sync against the
+    # round-start master (today's fused semantics, bit-exact with the
+    # pre-staleness trajectories). 1 = workers score and pull toward the
+    # *previous* round's master snapshot (``master_prev``), so round r's
+    # elastic exchange depends only on state known before round r−1's
+    # master reduction lands — the comm phase of round r can overlap the
+    # local phase of round r+1. Fused-mode only: the sequential backend is
+    # the paper's event-ordered live-master scan, where staleness has no
+    # consistent meaning.
+    staleness: int = 0                # 0 | 1
     # Execution placement (repro/core/coordinator.py). "single" simulates all
     # k workers on one device (vmap over the worker axis). "sharded" places
     # the worker axis over the mesh's 'pod' axis via shard_map: the local
@@ -207,6 +220,15 @@ class ElasticConfig:
                 "placement='sharded' requires comm_mode='fused': the "
                 "sequential backend is an event-ordered scan over workers "
                 "and cannot be placed on disjoint mesh shards")
+        if self.staleness not in (0, 1):
+            raise ValueError(
+                f"staleness must be 0 or 1, got {self.staleness!r}")
+        if self.staleness and self.comm_mode != "fused":
+            raise ValueError(
+                "staleness=1 (delayed averaging) requires comm_mode='fused':"
+                " the sequential backend is the paper's event-ordered scan "
+                "against the live master, where a stale sync target has no "
+                "consistent meaning")
         if self.failure_scenario not in FAILURE_SCENARIOS:
             raise ValueError(
                 f"failure_scenario must be one of {FAILURE_SCENARIOS}, "

@@ -13,7 +13,12 @@ One round =
   1. **local phase** — every worker runs τ local optimizer steps on its own
      (overlap-sharded) data: ``vmap`` over the worker axis, ``scan`` over τ.
      With AdaHessian the Hutchinson HVP rides along (EAHES); with
-     SGD/Momentum this is EASGD/EAMSGD.
+     SGD/Momentum this is EASGD/EAMSGD. Under ``use_pallas`` the AdaHessian
+     τ-step is *fused* (ISSUE-7): the gradient and the HVP share one
+     linearization and all k workers' moment + parameter updates run as a
+     single batched Pallas kernel over flat (k, rows, 128) views
+     (``repro.kernels.adahessian``) — one HBM round-trip per τ-step,
+     bit-exact with the plain path.
   2. **communication phase** — workers sync with the master: update the
      u-history from the estimated master distance, compute the raw score,
      map through h1/h2 (or fixed α / oracle), and apply the elastic
@@ -77,8 +82,9 @@ import jax.numpy as jnp
 from repro.configs.base import ElasticConfig, OptimizerConfig
 from repro.core import dynamic_weight as dw
 from repro.core.elastic import elastic_update, elastic_update_batched
+from repro.optim.adahessian import spatial_average
 from repro.optim.base import apply_updates, make_optimizer
-from repro.optim.hutchinson import hessian_diag
+from repro.optim.hutchinson import hessian_diag, hessian_diag_with_grad
 
 
 def tree_stack_copies(tree, k: int):
@@ -149,9 +155,21 @@ class ElasticTrainer:
     use_pallas: bool = False
     # sharded placement only: mesh whose 'pod' axis hosts the worker shards
     mesh: Any = None
+    # Fused local phase (ISSUE-7): one batched multi-worker AdaHessian
+    # update per τ-step instead of vmapping the per-worker optimizer, with
+    # the gradient and the Hutchinson HVP sharing one linearization. None
+    # (default) follows ``use_pallas``; an explicit bool decouples the
+    # fused *structure* from the Pallas kernel (the local-phase benchmark
+    # measures the jnp-fused variant this way). AdaHessian-only — other
+    # optimizers fall back to the plain path.
+    fused_local: Any = None
 
     def __post_init__(self):
         self.opt = make_optimizer(self.opt_cfg)
+        self._fused_local = (
+            (self.use_pallas if self.fused_local is None
+             else bool(self.fused_local))
+            and self.opt_cfg.name == "adahessian")
         if self.ecfg.placement == "sharded":
             if self.mesh is None:
                 raise ValueError(
@@ -235,6 +253,47 @@ class ElasticTrainer:
         params = apply_updates(params, updates)
         return params, opt_state, loss
 
+    def _grads_one(self, params, batch, rng):
+        """Front half of ``_one_step`` for the fused local phase: loss,
+        gradient and *spatially averaged* Hutchinson diagonal for one
+        worker. The gradient and the HVP probes share one linearization
+        (``hessian_diag_with_grad``) instead of ``value_and_grad`` plus a
+        fresh ``jvp`` — same bits, one less backward derivation. Spatial
+        averaging happens here, per worker, because a stacked scalar leaf
+        would otherwise average across the worker axis."""
+        loss_fn = lambda p: self.model.loss(p, batch)[0]
+        loss = loss_fn(params)
+        grads, diag = hessian_diag_with_grad(
+            jax.grad(loss_fn), params, rng, self.opt_cfg.hutchinson_samples)
+        hs = jax.tree.map(
+            lambda h: spatial_average(h, self.opt_cfg.spatial_block), diag)
+        return loss, grads, hs
+
+    def _fused_local_step(self, params, opt_state, batch, rngs, k_loc, axis):
+        """One τ-step for all k workers with the update batched (ISSUE-7):
+        per-worker gradients + averaged Hessian diagonals, then a single
+        multi-worker AdaHessian step over the stacked trees — the Pallas
+        kernel on the single-device path (interpret mode on CPU), the
+        bitwise-identical vmapped jnp expression per shard under sharded
+        placement (mirroring the elastic comm kernel's gating)."""
+        from repro.kernels.adahessian.ops import adahessian_update_batched
+
+        if axis is not None and k_loc == 1:
+            # one worker per shard: unbatched gradients, for the same
+            # singleton-vmap conv-lowering reason as the plain path below
+            sq = lambda t: jax.tree.map(lambda x: x[0], t)
+            loss, grads, hs = self._grads_one(sq(params), sq(batch), rngs[0])
+            loss = loss[None]
+            grads = jax.tree.map(lambda x: x[None], grads)
+            hs = jax.tree.map(lambda x: x[None], hs)
+        else:
+            loss, grads, hs = jax.vmap(self._grads_one)(params, batch, rngs)
+        new_p, new_o = adahessian_update_batched(
+            params, grads, hs, opt_state, self.opt_cfg,
+            use_kernel=self.use_pallas and axis is None,
+            interpret=jax.default_backend() != "tpu")
+        return new_p, new_o, loss
+
     def local_phase(self, state, batches, rng, straggle=None, active=None,
                     axis=None):
         """batches: pytree with leading (τ, k, ...) axes (k = slot capacity).
@@ -272,7 +331,10 @@ class ElasticTrainer:
             if axis is not None:
                 i0 = jax.lax.axis_index(axis) * k_loc
                 rngs = jax.lax.dynamic_slice_in_dim(rngs, i0, k_loc)
-            if axis is not None and k_loc == 1:
+            if self._fused_local:
+                new_p, new_o, loss = self._fused_local_step(
+                    params, opt_state, batch_t, rngs, k_loc, axis)
+            elif axis is not None and k_loc == 1:
                 # one worker per shard: run it unbatched. A vmap over a
                 # singleton worker axis lowers the conv weight-gradient
                 # differently from wider vmaps and breaks master bit-
@@ -416,6 +478,13 @@ class ElasticTrainer:
         fixed-α and oracle modes). Scores are computed against the same
         round-start master, which drops the scan's serial dependency.
 
+        ``ecfg.staleness = 1`` deepens the delay by one round (DaSGD):
+        scoring *and* the elastic diffs use the previous round's master
+        snapshot (``master_prev``), with the weighted pulls still
+        accumulated onto the live master. Straggler stale scoring
+        coincides with the ordinary scoring in that mode (both read
+        ``master_prev``).
+
         ``axis`` (sharded placement): scoring runs on this shard's local
         workers against the replicated master; the schedule weighting
         all-gathers the k h2 scalars and the elastic update all-gathers the
@@ -426,8 +495,16 @@ class ElasticTrainer:
         """
         ecfg = self.ecfg
         master = state["master"]
+        # Delayed averaging (ElasticConfig.staleness, DaSGD): score and
+        # pull toward the previous round's master snapshot instead of the
+        # round-start master, so this round's exchange depends only on
+        # state known before the previous reduction landed (comm of round
+        # r can overlap local of round r+1). With staleness=0 ``ref`` is
+        # the master itself and every expression below is unchanged.
+        ref = (state.get("master_prev", master) if ecfg.staleness
+               else master)
         u, hist, a, w1, w2 = dw.comm_scores_batched(
-            ecfg, state["workers"], master, state["u_hist"],
+            ecfg, state["workers"], ref, state["u_hist"],
             failed_recently=failed_recent,
             stale_master=(None if straggle is None
                           else state.get("master_prev", master)),
@@ -445,15 +522,17 @@ class ElasticTrainer:
             u = jnp.where(active, u, 0.0)
             a = jnp.where(active, a, 0.0)
         g2 = dw.master_schedule_weights(w2, axis_name=axis)
+        master_ref = ref if ecfg.staleness else None
         if self.use_pallas and axis is None:
             from repro.kernels.elastic.ops import elastic_update_batched_pallas
 
             workers, master = elastic_update_batched_pallas(
-                state["workers"], master, w1, g2,
+                state["workers"], master, w1, g2, master_ref=master_ref,
                 interpret=jax.default_backend() != "tpu")
         else:
             workers, master = elastic_update_batched(
-                state["workers"], master, w1, g2, axis_name=axis)
+                state["workers"], master, w1, g2, axis_name=axis,
+                master_ref=master_ref)
         metrics = {"u": u, "score": a, "h1": w1, "h2": w2}
         return dict(state, workers=workers, master=master,
                     master_prev=state["master"], u_hist=hist,

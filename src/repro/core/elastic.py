@@ -34,7 +34,7 @@ def elastic_update(worker_params, master_params, w1, w2):
 
 
 def elastic_update_batched(worker_stacked, master_params, w1, w2,
-                           axis_name=None):
+                           axis_name=None, master_ref=None):
     """All k worker exchanges plus the master reduction in one batched pass.
 
     ``worker_stacked`` leaves have a leading worker axis (k, ...); w1/w2 are
@@ -54,20 +54,37 @@ def elastic_update_batched(worker_stacked, master_params, w1, w2,
     decomposed as all-gather + local reduction — so the sharded master is
     bit-exact with the single-device fused master (a ``psum`` of per-shard
     partial sums would differ in the last ulp from re-associating the sum).
+
+    ``master_ref`` (optional pytree like the master): delayed averaging
+    (DaSGD / ``ElasticConfig.staleness``) — every diff θ^i − θ^ref is
+    measured against this stale snapshot while the accumulation target stays
+    the live master:
+
+        θ^i ← θ^i − w1_i · (θ^i − θ^ref)
+        θ^m ← θ^m + Σ_i w2_i · (θ^i − θ^ref)
+
+    so round r's exchange depends only on the snapshot, not on round r−1's
+    master reduction. ``None`` (the default) is the exact pre-staleness
+    code path — ``staleness=0`` trajectories are bit-identical.
     """
     w1 = jnp.asarray(w1, jnp.float32)
     w2 = jnp.asarray(w2, jnp.float32)
 
-    def upd(ws, m):
+    def upd(ws, m, ref=None):
         h1 = w1.reshape((-1,) + (1,) * (ws.ndim - 1))
         h2 = w2.reshape((-1,) + (1,) * (ws.ndim - 1))
         wf = ws.astype(jnp.float32)
         mf = m.astype(jnp.float32)
-        diff = wf - mf[None]
+        diff = wf - (mf[None] if ref is None
+                     else ref.astype(jnp.float32)[None])
         pull = h2 * diff
         if axis_name is not None:
             pull = jax.lax.all_gather(pull, axis_name, axis=0, tiled=True)
         return ((wf - h1 * diff).astype(ws.dtype),
                 (mf + jnp.sum(pull, axis=0)).astype(m.dtype))
 
-    return _unzip_pairs(jax.tree.map(upd, worker_stacked, master_params))
+    if master_ref is None:
+        pairs = jax.tree.map(upd, worker_stacked, master_params)
+    else:
+        pairs = jax.tree.map(upd, worker_stacked, master_params, master_ref)
+    return _unzip_pairs(pairs)

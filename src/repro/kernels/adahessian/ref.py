@@ -1,6 +1,7 @@
-"""Pure-jnp oracle for the fused AdaHessian kernel."""
+"""Pure-jnp oracles for the fused AdaHessian kernels."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs.base import OptimizerConfig
@@ -16,3 +17,29 @@ def adahessian_step_ref(p, g, h, m, v, cfg: OptimizerConfig, t):
     denom = jnp.power(v1 / bc2 + 1e-30, cfg.hessian_power / 2.0) + cfg.eps
     p1 = p - cfg.lr * (m1 / bc1) / denom
     return p1, m1, v1
+
+
+def adahessian_step_batched_ref(p, g, h, m, v, cfg: OptimizerConfig, t):
+    """Oracle for the multi-worker kernel: the single-worker step vmapped
+    over a leading (k,) axis with per-worker step counts ``t`` (k,).
+    The op order mirrors the kernel exactly (decoupled weight decay folded
+    into the update ``u`` *before* the single parameter add) so comparisons
+    can be bitwise when both sides run under jit. Compare under ``jax.jit``:
+    eager per-op dispatch contracts mul+add differently than a fused jit
+    body, which perturbs the last bit."""
+    b1, b2 = cfg.betas
+
+    def one(p_, g_, h_, m_, v_, t_):
+        tf = jnp.asarray(t_, jnp.float32)
+        m1 = b1 * m_ + (1 - b1) * g_.astype(jnp.float32)
+        v1 = b2 * v_ + (1 - b2) * jnp.square(h_)
+        bc1 = 1 - b1 ** tf
+        bc2 = 1 - b2 ** tf
+        denom = jnp.power(v1 / bc2 + 1e-30, cfg.hessian_power / 2.0) + cfg.eps
+        u = -cfg.lr * (m1 / bc1) / denom
+        if cfg.weight_decay:
+            u = u - cfg.lr * cfg.weight_decay * p_.astype(jnp.float32)
+        p1 = (p_.astype(jnp.float32) + u).astype(p_.dtype)
+        return p1, m1, v1
+
+    return jax.vmap(one)(p, g, h, m, v, jnp.asarray(t))

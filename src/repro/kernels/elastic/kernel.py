@@ -72,16 +72,25 @@ def elastic_update_flat(
 # multi-worker fused communication phase
 # ---------------------------------------------------------------------------
 
-def _make_batched_kernel(k: int):
-    def kernel(h_ref, w_ref, m_ref, w_out_ref, m_out_ref):
-        # h_ref: (2, k) scalar-prefetched into SMEM; w_ref: (k, bR, LANES)
+def _make_batched_kernel(k: int, stale: bool = False):
+    def kernel(h_ref, w_ref, m_ref, *rest):
+        # h_ref: (2, k) scalar-prefetched into SMEM; w_ref: (k, bR, LANES).
+        # With ``stale`` (delayed averaging) an extra ref block follows m:
+        # diffs are measured against it, accumulation stays on m.
+        if stale:
+            r_ref, w_out_ref, m_out_ref = rest
+            ref = r_ref[...].astype(jnp.float32)
+        else:
+            w_out_ref, m_out_ref = rest
         m = m_ref[...].astype(jnp.float32)
+        if not stale:
+            ref = m
         acc = jnp.zeros_like(m)
         for i in range(k):  # k is static → unrolled; scalar SMEM reads
             h1 = h_ref[0, i]
             h2 = h_ref[1, i]
             w = w_ref[i].astype(jnp.float32)
-            diff = w - m
+            diff = w - ref
             w_out_ref[i] = (w - h1 * diff).astype(w_out_ref.dtype)
             acc = acc + h2 * diff
         m_out_ref[...] = (m + acc).astype(m_out_ref.dtype)
@@ -100,6 +109,7 @@ def elastic_update_batched_flat(
     m: jax.Array,
     h1: jax.Array,
     h2: jax.Array,
+    ref: jax.Array | None = None,
     *,
     interpret: bool = True,
     block_rows: int | None = None,
@@ -110,6 +120,11 @@ def elastic_update_batched_flat(
     h2-weighted master reduction θ^m ← θ^m + Σ_i h2_i (θ^i − θ^m) in a
     single HBM round-trip: each (w, m) element is read once and each
     (w', m') element written once, vs 2k reads of m in the sequential scan.
+
+    ``ref`` (optional, (rows, 128)): delayed averaging — every diff is
+    measured against this stale master snapshot instead of ``m``, while the
+    master accumulation target stays ``m`` (one extra read per element).
+    ``None`` compiles the exact pre-staleness kernel.
     """
     k, rows, lanes = w.shape
     if block_rows is None:
@@ -119,19 +134,21 @@ def elastic_update_batched_flat(
     h = jnp.stack([h1.astype(jnp.float32), h2.astype(jnp.float32)])
     wspec = pl.BlockSpec((k, block_rows, LANES), lambda i, hv: (0, i, 0))
     mspec = pl.BlockSpec((block_rows, LANES), lambda i, hv: (i, 0))
+    stale = ref is not None
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,  # h lands in SMEM before the body runs
         grid=(rows // block_rows,),
-        in_specs=[wspec, mspec],
+        in_specs=[wspec, mspec] + ([mspec] if stale else []),
         out_specs=[wspec, mspec],
     )
+    operands = (h, w, m) + ((ref,) if stale else ())
     out = pl.pallas_call(
-        _make_batched_kernel(k),
+        _make_batched_kernel(k, stale=stale),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct(w.shape, w.dtype),
             jax.ShapeDtypeStruct(m.shape, m.dtype),
         ],
         interpret=interpret,
-    )(h, w, m)
+    )(*operands)
     return out[0], out[1]

@@ -8,74 +8,48 @@ from repro.kernels.elastic.kernel import (BLOCK_ROWS, LANES,
                                           batched_block_rows,
                                           elastic_update_batched_flat,
                                           elastic_update_flat)
+from repro.kernels.flatten import (flatten_stacked, flatten_tree, unflatten,
+                                   unflatten_stacked)
 
-
-def _flatten_tree(tree, tile_rows: int = BLOCK_ROWS):
-    leaves, treedef = jax.tree.flatten(tree)
-    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
-                            for l in leaves])
-    n = flat.shape[0]
-    tile = tile_rows * LANES
-    pad = (-n) % tile
-    flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, LANES), leaves, treedef, n
-
-
-def _unflatten(flat2d, leaves, treedef, n):
-    flat = flat2d.reshape(-1)[:n]
-    out, off = [], 0
-    for l in leaves:
-        out.append(flat[off:off + l.size].reshape(l.shape).astype(l.dtype))
-        off += l.size
-    return jax.tree.unflatten(treedef, out)
+# Shared with repro.kernels.adahessian via repro.kernels.flatten; the old
+# private names stay importable.
+_flatten_tree = flatten_tree
+_unflatten = unflatten
+_flatten_stacked = flatten_stacked
+_unflatten_stacked = unflatten_stacked
 
 
 def elastic_update_pallas(worker_params, master_params, h1, h2, *,
                           interpret: bool = True):
     """Fused eqs. (12)–(13) over whole pytrees. Returns (worker', master')."""
-    wf, wl, wd, n = _flatten_tree(worker_params)
-    mf, ml, md, _ = _flatten_tree(master_params)
+    wf, wl, wd, n = flatten_tree(worker_params, BLOCK_ROWS)
+    mf, ml, md, _ = flatten_tree(master_params, BLOCK_ROWS)
     w2d, m2d = elastic_update_flat(
         wf, mf, jnp.asarray(h1), jnp.asarray(h2), interpret=interpret)
-    return (_unflatten(w2d, wl, wd, n), _unflatten(m2d, ml, md, n))
-
-
-def _flatten_stacked(tree, tile_rows: int):
-    """Stacked pytree (leading worker axis k) → (k, rows, LANES)."""
-    leaves, treedef = jax.tree.flatten(tree)
-    k = leaves[0].shape[0]
-    flat = jnp.concatenate([l.reshape(k, -1).astype(jnp.float32)
-                            for l in leaves], axis=1)
-    n = flat.shape[1]
-    tile = tile_rows * LANES
-    pad = (-n) % tile
-    flat = jnp.pad(flat, ((0, 0), (0, pad)))
-    return flat.reshape(k, -1, LANES), leaves, treedef, n
-
-
-def _unflatten_stacked(flat3d, leaves, treedef, n):
-    k = flat3d.shape[0]
-    flat = flat3d.reshape(k, -1)[:, :n]
-    out, off = [], 0
-    for l in leaves:
-        size = l.size // k
-        out.append(flat[:, off:off + size].reshape(l.shape).astype(l.dtype))
-        off += size
-    return jax.tree.unflatten(treedef, out)
+    return (unflatten(w2d, wl, wd, n), unflatten(m2d, ml, md, n))
 
 
 def elastic_update_batched_pallas(worker_stacked, master_params, h1, h2, *,
-                                  interpret: bool = True):
+                                  master_ref=None, interpret: bool = True):
     """All k worker exchanges + the h2-weighted master reduction in one
     kernel pass. ``worker_stacked`` leaves carry a leading (k,) axis; h1/h2
     are (k,) vectors (pass ``master_schedule_weights(h2)`` for event-order
-    parity with the sequential scan). Returns (workers', master')."""
+    parity with the sequential scan). Returns (workers', master').
+
+    ``master_ref`` (optional pytree like the master): delayed averaging —
+    the elastic diffs θ^i − θ^ref are measured against this stale snapshot
+    while the accumulation target stays the live master (see
+    ``repro.core.elastic.elastic_update_batched``). ``None`` is the exact
+    pre-staleness kernel."""
     h1 = jnp.asarray(h1, jnp.float32)
     h2 = jnp.asarray(h2, jnp.float32)
     k = h1.shape[0]
     tile_rows = batched_block_rows(k)
-    wf, wl, wd, n = _flatten_stacked(worker_stacked, tile_rows)
-    mf, ml, md, _ = _flatten_tree(master_params, tile_rows)
+    wf, wl, wd, n = flatten_stacked(worker_stacked, tile_rows)
+    mf, ml, md, _ = flatten_tree(master_params, tile_rows)
+    rf = None
+    if master_ref is not None:
+        rf = flatten_tree(master_ref, tile_rows)[0]
     w3d, m2d = elastic_update_batched_flat(
-        wf, mf, h1, h2, interpret=interpret, block_rows=tile_rows)
-    return (_unflatten_stacked(w3d, wl, wd, n), _unflatten(m2d, ml, md, n))
+        wf, mf, h1, h2, ref=rf, interpret=interpret, block_rows=tile_rows)
+    return (unflatten_stacked(w3d, wl, wd, n), unflatten(m2d, ml, md, n))

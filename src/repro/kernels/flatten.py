@@ -1,0 +1,65 @@
+"""Pytree ↔ flat (rows, 128) lane views shared by the Pallas kernels.
+
+Both kernel families (``repro.kernels.elastic``, ``repro.kernels.adahessian``)
+operate on whole parameter pytrees flattened into f32 lane-major 2-D/3-D
+views: leaves are raveled, concatenated, zero-padded up to a whole number of
+(tile_rows × 128) tiles and reshaped to (rows, 128) — stacked trees (leading
+worker axis k) flatten per worker to (k, rows, 128). ``unflatten`` reverses
+the trip, casting each leaf back to its original dtype.
+
+The pad value is configurable (``pad_value``) because padding must be benign
+for the kernel's math: elastic updates are linear (0 is fine), but the
+AdaHessian second moment feeds a fractional power, so its ``v`` buffer pads
+with 1s.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANES = 128
+
+
+def flatten_tree(tree, tile_rows: int, pad_value: float = 0.0):
+    """Pytree → ((rows, LANES) f32, leaves, treedef, n)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    n = flat.shape[0]
+    tile = tile_rows * LANES
+    pad = (-n) % tile
+    flat = jnp.pad(flat, (0, pad), constant_values=pad_value)
+    return flat.reshape(-1, LANES), leaves, treedef, n
+
+
+def unflatten(flat2d, leaves, treedef, n):
+    flat = flat2d.reshape(-1)[:n]
+    out, off = [], 0
+    for l in leaves:
+        out.append(flat[off:off + l.size].reshape(l.shape).astype(l.dtype))
+        off += l.size
+    return jax.tree.unflatten(treedef, out)
+
+
+def flatten_stacked(tree, tile_rows: int, pad_value: float = 0.0):
+    """Stacked pytree (leading worker axis k) → (k, rows, LANES)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    k = leaves[0].shape[0]
+    flat = jnp.concatenate([l.reshape(k, -1).astype(jnp.float32)
+                            for l in leaves], axis=1)
+    n = flat.shape[1]
+    tile = tile_rows * LANES
+    pad = (-n) % tile
+    flat = jnp.pad(flat, ((0, 0), (0, pad)), constant_values=pad_value)
+    return flat.reshape(k, -1, LANES), leaves, treedef, n
+
+
+def unflatten_stacked(flat3d, leaves, treedef, n):
+    k = flat3d.shape[0]
+    flat = flat3d.reshape(k, -1)[:, :n]
+    out, off = [], 0
+    for l in leaves:
+        size = l.size // k
+        out.append(flat[:, off:off + size].reshape(l.shape).astype(l.dtype))
+        off += size
+    return jax.tree.unflatten(treedef, out)

@@ -88,6 +88,17 @@ def main(argv=None):
                     choices=("sequential", "fused"),
                     help="communication backend: event-ordered scan "
                          "(paper) or fused batched sync")
+    ap.add_argument("--staleness", type=int, default=0, choices=(0, 1),
+                    help="delayed averaging depth (DaSGD): 1 scores and "
+                         "pulls against the previous round's master "
+                         "snapshot so round r's exchange can overlap round "
+                         "r+1's local compute (requires --comm-mode fused)")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="run the fused Pallas kernel paths (elastic comm, "
+                         "batched AdaHessian local phase, model-internal "
+                         "flash attention); interpret mode off-TPU. One "
+                         "flag drives every kernel path (RunSpec is the "
+                         "single source of truth)")
     ap.add_argument("--placement", default="single",
                     choices=("single", "sharded"),
                     help="worker placement: simulate all k workers on one "
@@ -147,7 +158,7 @@ def main(argv=None):
         alpha=args.alpha, overlap_ratio=args.overlap,
         failure_prob=args.failure_prob,
         dynamic=not args.no_dynamic, comm_mode=args.comm_mode,
-        placement=args.placement,
+        staleness=args.staleness, placement=args.placement,
         failure_scenario=args.failure_scenario,
         membership_scenario=membership, membership_k=args.membership_k,
         membership_round=args.membership_round, membership_plan=plan)
@@ -159,6 +170,7 @@ def main(argv=None):
         plain=not args.elastic, batch_size=args.batch_size,
         seq_len=args.seq_len, n_data=8000, n_test=1000,
         data_seed=args.data_seed, save_path=args.save,
+        use_pallas=args.use_pallas,
         controller=(None if args.controller == "none" else args.controller),
         detector_blind=args.detector_blind)
     sess = ElasticSession(spec)

@@ -45,10 +45,43 @@ def spatial_average(h: jax.Array, block: int) -> jax.Array:
         jnp.mean(hb, axis=-1, keepdims=True), shape).reshape(h.shape)
 
 
-def adahessian(cfg: OptimizerConfig) -> Optimizer:
-    b1, b2 = cfg.betas
-    k = cfg.hessian_power
+def moment_update(cfg: OptimizerConfig, grads, state, params, hs):
+    """Moments + bias-corrected step from an already spatially averaged
+    Hessian diagonal ``hs``. Returns ``(updates, new_state)``.
 
+    This is ``adahessian().update`` minus the spatial averaging — split out
+    so the fused local phase (repro/core/coordinator.py), which averages
+    per worker before stacking, can reuse the exact update expression. The
+    batched Pallas kernel (``repro.kernels.adahessian``) mirrors these ops
+    one-for-one; keep them in sync or interpret-mode bit-exactness breaks.
+    """
+    b1, b2 = cfg.betas
+    t = state["count"] + 1
+    m = jax.tree.map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+        state["m"], grads)
+    v = jax.tree.map(
+        lambda v_, h: b2 * v_ + (1 - b2) * jnp.square(h), state["v"], hs)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    denom_pow = cfg.hessian_power / 2.0
+
+    def upd_fn(m_, v_):
+        denom = jnp.power(v_ / bc2 + 1e-30, denom_pow) + cfg.eps
+        u = -cfg.lr * (m_ / bc1) / denom
+        if cfg.weight_decay:
+            return u  # decoupled decay applied by caller if needed
+        return u
+
+    upd = jax.tree.map(upd_fn, m, v)
+    if cfg.weight_decay and params is not None:
+        upd = jax.tree.map(
+            lambda u, p: u - cfg.lr * cfg.weight_decay * p.astype(
+                jnp.float32), upd, params)
+    return upd, {"count": t, "m": m, "v": v}
+
+
+def adahessian(cfg: OptimizerConfig) -> Optimizer:
     def init(params):
         return {"count": jnp.zeros((), jnp.int32),
                 "m": tree_zeros_f32(params), "v": tree_zeros_f32(params)}
@@ -56,31 +89,9 @@ def adahessian(cfg: OptimizerConfig) -> Optimizer:
     def update(grads, state, params=None, extras=None):
         assert extras is not None and "hess_diag" in extras, (
             "adahessian requires extras['hess_diag'] (Hutchinson estimate)")
-        t = state["count"] + 1
         hs = jax.tree.map(
             lambda h: spatial_average(h, cfg.spatial_block),
             extras["hess_diag"])
-        m = jax.tree.map(
-            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
-            state["m"], grads)
-        v = jax.tree.map(
-            lambda v_, h: b2 * v_ + (1 - b2) * jnp.square(h), state["v"], hs)
-        bc1 = 1 - b1 ** t.astype(jnp.float32)
-        bc2 = 1 - b2 ** t.astype(jnp.float32)
-        denom_pow = k / 2.0
-
-        def upd_fn(m_, v_):
-            denom = jnp.power(v_ / bc2 + 1e-30, denom_pow) + cfg.eps
-            u = -cfg.lr * (m_ / bc1) / denom
-            if cfg.weight_decay:
-                return u  # decoupled decay applied by caller if needed
-            return u
-
-        upd = jax.tree.map(upd_fn, m, v)
-        if cfg.weight_decay and params is not None:
-            upd = jax.tree.map(
-                lambda u, p: u - cfg.lr * cfg.weight_decay * p.astype(
-                    jnp.float32), upd, params)
-        return upd, {"count": t, "m": m, "v": v}
+        return moment_update(cfg, grads, state, params, hs)
 
     return Optimizer(init, update, needs_hessian=True)

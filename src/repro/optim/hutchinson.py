@@ -6,6 +6,20 @@ The Hessian-vector product uses forward-over-reverse AD:
 ``jvp(grad(loss))`` — one extra backprop-equivalent per probe, exactly the
 cost the paper cites. Fully shardable: the probe z lives on the parameter
 sharding, so the HVP's collectives mirror the gradient's.
+
+Multi-probe accumulation runs as a ``lax.scan`` over the probe keys: the
+jaxpr stays constant-size in ``num_samples`` (the old Python loop unrolled
+one full HVP per probe). The scan threads the accumulator through the same
+left-to-right ``jnp.add`` sequence, so the result is bit-exact with the
+unrolled form (``tests/test_optim.py`` holds that line).
+
+``hessian_diag_with_grad`` is the fused local phase's entry point
+(repro/core/coordinator.py): one ``jax.linearize`` of ``grad_fn`` yields
+the gradient as the primal *and* a cheap re-playable tangent map for every
+probe, instead of evaluating ``value_and_grad`` and then re-deriving the
+gradient inside each ``jvp``. The primal of ``jvp(grad_fn)`` is the same
+computation as ``grad_fn`` itself, so the returned gradient is bit-exact
+with the ``value_and_grad`` path.
 """
 from __future__ import annotations
 
@@ -31,6 +45,18 @@ def hvp(grad_fn: Callable, params, z):
     return jax.jvp(grad_fn, (params,), (z,))[1]
 
 
+def _probe_scan(one: Callable, keys):
+    """Left-fold ``one`` over ``keys[1:]`` starting from ``one(keys[0])`` —
+    the same accumulation order as the unrolled loop, constant jaxpr size."""
+    acc0 = one(keys[0])
+
+    def step(acc, k):
+        return jax.tree.map(jnp.add, acc, one(k)), None
+
+    acc, _ = jax.lax.scan(step, acc0, keys[1:])
+    return acc
+
+
 def hessian_diag(grad_fn: Callable, params, rng: jax.Array,
                  num_samples: int = 1):
     """Hutchinson estimate of diag(H); returns an f32 pytree like params."""
@@ -45,7 +71,31 @@ def hessian_diag(grad_fn: Callable, params, rng: jax.Array,
     if num_samples == 1:
         return one(rng)
     keys = jax.random.split(rng, num_samples)
-    acc = one(keys[0])
-    for k in keys[1:]:
-        acc = jax.tree.map(jnp.add, acc, one(k))
+    acc = _probe_scan(one, keys)
     return jax.tree.map(lambda x: x / num_samples, acc)
+
+
+def hessian_diag_with_grad(grad_fn: Callable, params, rng: jax.Array,
+                           num_samples: int = 1):
+    """(grad, Hutchinson diag) sharing one linearization of ``grad_fn``.
+
+    ``jax.linearize`` evaluates ``grad_fn`` once (the primal — bit-exact
+    with ``value_and_grad``'s gradient) and returns the tangent map that
+    every probe's HVP replays, so the gradient's backward pass is not
+    re-derived per probe the way ``value_and_grad`` + ``jvp(grad_fn)``
+    re-derives it.
+    """
+    grads, f_jvp = jax.linearize(grad_fn, params)
+
+    def one(rng_i):
+        z = rademacher_like(rng_i, params)
+        hz = f_jvp(z)
+        return jax.tree.map(
+            lambda a, b: (a.astype(jnp.float32) * b.astype(jnp.float32)),
+            z, hz)
+
+    if num_samples == 1:
+        return grads, one(rng)
+    keys = jax.random.split(rng, num_samples)
+    acc = _probe_scan(one, keys)
+    return grads, jax.tree.map(lambda x: x / num_samples, acc)

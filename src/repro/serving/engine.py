@@ -28,8 +28,23 @@ class ServeEngine:
 
     def generate(self, prompts: np.ndarray, *, steps: int = 32,
                  eos_id: Optional[int] = None, extra_batch=None):
-        """prompts: (B, S0) int32 → (B, steps) generated tokens (greedy)."""
+        """prompts: (B, S0) int32 → (B, ≤steps) generated tokens (greedy;
+        the width shrinks only when every row hits ``eos_id`` early).
+
+        Rows that have emitted ``eos_id`` are pinned: their remaining
+        output positions are ``eos_id`` and the pinned token is what gets
+        fed back into the decode step, so a finished row can never
+        resurface non-EOS tokens. The KV cache holds ``max_len`` positions
+        including the prompt — a request that could decode past it is
+        rejected up front (the old code only checked mid-loop, and only
+        when ``eos_id`` was set).
+        """
         B, S0 = prompts.shape
+        if S0 + steps > self.max_len:
+            raise ValueError(
+                f"generate: prompt length {S0} + steps {steps} = "
+                f"{S0 + steps} overruns the KV cache (max_len="
+                f"{self.max_len}); raise max_len or request fewer steps")
         cache = self.model.init_cache(B, self.max_len)
         batch = {"tokens": jnp.asarray(prompts)}
         if extra_batch:
@@ -38,16 +53,22 @@ class ServeEngine:
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         out = [np.asarray(tok)]
         finished = np.zeros(B, bool)
+        if eos_id is not None:
+            # the prefill-produced first token can itself be EOS
+            finished |= out[0][:, 0] == eos_id
         index = S0
         for _ in range(steps - 1):
+            if eos_id is not None and finished.all():
+                break
             logits, cache = self._decode(
                 self.params, {"tokens": tok}, cache, index)
             tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            if eos_id is not None:
+                tok = jnp.where(jnp.asarray(finished)[:, None],
+                                jnp.asarray(eos_id, jnp.int32), tok)
             t_np = np.asarray(tok)
             out.append(t_np)
             index += 1
             if eos_id is not None:
-                finished |= (t_np[:, 0] == eos_id)
-                if finished.all() or index >= self.max_len:
-                    break
+                finished |= t_np[:, 0] == eos_id
         return np.concatenate(out, axis=1)

@@ -1,0 +1,369 @@
+"""Fused local phase (ISSUE-7): batched multi-worker AdaHessian kernel
+parity, use_pallas plumbing, delayed averaging (staleness), and full-run
+equivalence of the fused vs plain local paths.
+
+Bitwise comparisons run both sides under ``jax.jit`` with all array inputs
+traced: eager per-op dispatch and closure constant-folding both perturb
+mul+add contraction in the last ulp, which is numerics noise, not a kernel
+property.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+from repro.core.coordinator import ElasticTrainer, RoundInputs
+from repro.models.registry import build_model
+
+SHAPES = [(7,), (3, 3, 2, 5), (33, 130)]  # bias, conv kernel, d % 128 != 0
+
+
+def _stacked_tree(k, seed, scale=1.0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(SHAPES))
+    return {f"p{i}": scale * jax.random.normal(kk, (k,) + s, jnp.float32)
+            for i, (kk, s) in enumerate(zip(keys, SHAPES))}
+
+
+def _problem(k):
+    p, g, h = _stacked_tree(k, 1), _stacked_tree(k, 2), _stacked_tree(k, 3)
+    m = _stacked_tree(k, 4, scale=0.1)
+    v = jax.tree.map(jnp.abs, _stacked_tree(k, 5, scale=0.1))
+    count = jnp.arange(1, k + 1, dtype=jnp.int32) * 2 + 1  # distinct per-worker t
+    return p, g, h, {"count": count, "m": m, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle, interpret mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("k", [1, 4, 8])
+@pytest.mark.parametrize("wd", [0.0, 1e-4])
+def test_batched_kernel_matches_ref_bitwise(k, wd):
+    """The multi-worker kernel == the vmapped single-worker oracle, bit for
+    bit, across odd shapes and per-worker step counts."""
+    from repro.kernels.adahessian.ops import adahessian_update_batched
+    from repro.kernels.adahessian.ref import adahessian_step_batched_ref
+
+    cfg = OptimizerConfig(name="adahessian", lr=1e-3, weight_decay=wd)
+    p, g, h, state = _problem(k)
+    fk = jax.jit(functools.partial(adahessian_update_batched, cfg=cfg,
+                                   use_kernel=True, interpret=True))
+    new_p, new_s = fk(p, g, h, state)
+    fr = jax.jit(lambda p, g, h, m, v, t: {
+        n: adahessian_step_batched_ref(p[n], g[n], h[n], m[n], v[n], cfg, t)
+        for n in p})
+    refs = fr(p, g, h, state["m"], state["v"], state["count"] + 1)
+    np.testing.assert_array_equal(np.asarray(new_s["count"]),
+                                  np.asarray(state["count"] + 1))
+    for name in p:
+        rp, rm, rv = refs[name]
+        for got, want in ((new_p[name], rp), (new_s["m"][name], rm),
+                          (new_s["v"][name], rv)):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("k", [1, 4])
+def test_batched_kernel_matches_jnp_path_bitwise(k):
+    """use_kernel=True == use_kernel=False (the vmapped moment_update path
+    used per shard under sharded placement), bit for bit."""
+    from repro.kernels.adahessian.ops import adahessian_update_batched
+
+    cfg = OptimizerConfig(name="adahessian", lr=1e-3, weight_decay=1e-4)
+    p, g, h, state = _problem(k)
+    outs = {}
+    for use_kernel in (True, False):
+        f = jax.jit(functools.partial(adahessian_update_batched, cfg=cfg,
+                                      use_kernel=use_kernel, interpret=True))
+        outs[use_kernel] = f(p, g, h, state)
+    for a, b in zip(jax.tree.leaves(outs[True]), jax.tree.leaves(outs[False])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# trainer: fused local phase == plain local phase
+# ---------------------------------------------------------------------------
+
+def _round_once(tr, k, seed=0):
+    state = tr.init_state(jax.random.key(0))
+    batches = {
+        "images": jax.random.normal(jax.random.key(5 + seed),
+                                    (2, k, 4, 28, 28, 1), jnp.float32),
+        "labels": jnp.zeros((2, k, 4), jnp.int32),
+    }
+    new_state, _ = tr.round_step(state, RoundInputs(
+        batches=batches, rng=jax.random.key(1),
+        fail=jnp.zeros(k, bool), failed_recent=jnp.zeros(k, bool)))
+    return new_state
+
+
+@pytest.mark.pallas
+def test_fused_local_phase_workers_bitwise():
+    """Plain vmapped per-worker steps, the fused jnp structure, and the
+    fused Pallas kernel all produce bit-identical worker params after a
+    τ=2 round (the comm phase is shared, so workers are the local-phase
+    comparison)."""
+    model = build_model(get_config("paper_cnn"))
+    ecfg = ElasticConfig(num_workers=2, tau=2, comm_mode="fused")
+    ocfg = OptimizerConfig(name="adahessian", lr=1e-3)
+    mk = lambda **kw: ElasticTrainer(model, ocfg, ecfg, **kw)
+    plain = _round_once(mk(), 2)
+    fused_jnp = _round_once(mk(fused_local=True), 2)
+    fused_pallas = _round_once(mk(use_pallas=True), 2)
+    for variant in (fused_jnp, fused_pallas):
+        for a, b in zip(jax.tree.leaves(plain["workers"]),
+                        jax.tree.leaves(variant["workers"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(plain["opt"]),
+                        jax.tree.leaves(variant["opt"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_local_requires_adahessian():
+    """The fused path is AdaHessian-only — other optimizers silently fall
+    back to the plain per-worker step (use_pallas still gates the elastic
+    comm kernel)."""
+    model = build_model(get_config("paper_cnn"))
+    tr = ElasticTrainer(model, OptimizerConfig(name="sgd", lr=0.01),
+                        ElasticConfig(num_workers=2, tau=1), use_pallas=True)
+    assert tr._fused_local is False
+
+
+# ---------------------------------------------------------------------------
+# full runs: use_pallas=True vs False
+# ---------------------------------------------------------------------------
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("comm_mode,placement", [
+    ("sequential", "single"), ("fused", "single"), ("fused", "sharded")])
+def test_full_run_pallas_vs_jnp(comm_mode, placement):
+    """A full multi-round AdaHessian run with use_pallas=True tracks the
+    jnp run: worker params bit-exact (the fused local phase is bitwise),
+    master allclose (the elastic comm kernel's flat layout re-associates
+    the weighted reduction — same tolerance as its own parity tests)."""
+    from repro.api import ElasticSession, RunSpec
+
+    def run(use_pallas):
+        spec = RunSpec(
+            arch="paper-cnn",
+            optimizer=OptimizerConfig(name="adahessian", lr=1e-3),
+            elastic=ElasticConfig(num_workers=2, tau=1, dynamic=True,
+                                  comm_mode=comm_mode, placement=placement),
+            rounds=2, seed=1, batch_size=4, n_data=64, n_test=32,
+            use_pallas=use_pallas)
+        sess = ElasticSession(spec)
+        recs = sess.run()
+        return sess, recs
+
+    s1, r1 = run(False)
+    s2, r2 = run(True)
+    for a, b in zip(jax.tree.leaves(s1.state["workers"]),
+                    jax.tree.leaves(s2.state["workers"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s1.master_params),
+                    jax.tree.leaves(s2.master_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+    for a, b in zip(r1, r2):
+        np.testing.assert_allclose(a.loss, b.loss, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# delayed averaging (ElasticConfig.staleness, DaSGD)
+# ---------------------------------------------------------------------------
+
+def test_staleness_validation():
+    with pytest.raises(ValueError, match="staleness"):
+        ElasticConfig(staleness=2)
+    with pytest.raises(ValueError, match="fused"):
+        ElasticConfig(staleness=1, comm_mode="sequential")
+    ElasticConfig(staleness=1, comm_mode="fused")  # ok
+
+
+def test_elastic_update_master_ref_semantics():
+    """With master_ref, diffs are measured against the stale snapshot while
+    the accumulation target stays the live master — checked against the
+    hand-written DaSGD expressions."""
+    from repro.core.elastic import elastic_update_batched
+
+    k = 3
+    ws = _stacked_tree(k, 8)
+    master = {n: x[0] * 0.5 for n, x in _stacked_tree(1, 9).items()}
+    ref = {n: x[0] * 0.25 for n, x in _stacked_tree(1, 10).items()}
+    w1 = jnp.asarray([0.1, 0.3, 0.0])
+    w2 = jnp.asarray([0.2, 0.0, 0.4])
+    new_w, new_m = elastic_update_batched(ws, master, w1, w2,
+                                          master_ref=ref)
+    for n in ws:
+        diff = ws[n] - ref[n][None]
+        want_w = ws[n] - w1.reshape(-1, *([1] * (ws[n].ndim - 1))) * diff
+        want_m = master[n] + jnp.sum(
+            w2.reshape(-1, *([1] * (ws[n].ndim - 1))) * diff, axis=0)
+        np.testing.assert_allclose(np.asarray(new_w[n]), np.asarray(want_w),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(new_m[n]), np.asarray(want_m),
+                                   rtol=1e-6)
+
+
+@pytest.mark.pallas
+def test_elastic_pallas_master_ref_matches_jnp():
+    """The batched elastic kernel's master_ref path tracks the jnp
+    expression (same tolerance as the ref-less parity tests)."""
+    from repro.core.elastic import elastic_update_batched
+    from repro.kernels.elastic.ops import elastic_update_batched_pallas
+
+    k = 4
+    ws = _stacked_tree(k, 11)
+    master = {n: x[0] * 0.5 for n, x in _stacked_tree(1, 12).items()}
+    ref = {n: x[0] * 0.25 for n, x in _stacked_tree(1, 13).items()}
+    w1 = jnp.asarray([0.1, 0.3, 0.0, 0.7])
+    w2 = jnp.asarray([0.2, 0.0, 0.4, 0.1])
+    wj, mj = elastic_update_batched(ws, master, w1, w2, master_ref=ref)
+    wp, mp = elastic_update_batched_pallas(ws, master, w1, w2,
+                                           master_ref=ref, interpret=True)
+    for a, b in zip(jax.tree.leaves((wj, mj)), jax.tree.leaves((wp, mp))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def _staleness_trainer(staleness):
+    model = build_model(get_config("paper_cnn"))
+    return ElasticTrainer(
+        model, OptimizerConfig(name="sgd", lr=0.01),
+        ElasticConfig(num_workers=2, tau=1, comm_mode="fused",
+                      staleness=staleness))
+
+
+def _run_rounds(tr, rounds):
+    state = tr.init_state(jax.random.key(0))
+    states = []
+    for r in range(rounds):
+        batches = {
+            "images": jax.random.normal(jax.random.key(20 + r),
+                                        (1, 2, 4, 28, 28, 1), jnp.float32),
+            "labels": jnp.zeros((1, 2, 4), jnp.int32),
+        }
+        state, _ = tr.round_step(state, RoundInputs(
+            batches=batches, rng=jax.random.key(40 + r),
+            fail=jnp.zeros(2, bool), failed_recent=jnp.zeros(2, bool)))
+        states.append(jax.tree.map(np.asarray, state))
+    return states
+
+
+def test_staleness_first_round_coincides_then_diverges():
+    """Round 1: master_prev == the init master, so staleness=1 must match
+    staleness=0 exactly. Round 2: ref becomes M_0 (two rounds behind the
+    live master) and the trajectories split — DaSGD's one-round-deeper
+    delay, not a no-op flag."""
+    s0 = _run_rounds(_staleness_trainer(0), 2)
+    s1 = _run_rounds(_staleness_trainer(1), 2)
+    for a, b in zip(jax.tree.leaves(s0[0]), jax.tree.leaves(s1[0])):
+        np.testing.assert_array_equal(a, b)
+    m0 = jax.tree.leaves(s0[1]["master"])
+    m1 = jax.tree.leaves(s1[1]["master"])
+    assert any(not np.array_equal(a, b) for a, b in zip(m0, m1))
+
+
+def test_staleness_round2_uses_round0_master():
+    """The round-2 exchange of a staleness=1 run reproduces exactly when
+    recomputed with the *init* master as the elastic reference — the
+    mechanism, not just divergence."""
+    from repro.core.elastic import elastic_update_batched
+
+    tr = _staleness_trainer(1)
+    states = _run_rounds(tr, 2)
+    init_master = tr.init_state(jax.random.key(0))["master"]
+
+    # replay round 2's comm phase by hand: local phase of round 2, scores
+    # against M_0, elastic update with ref = M_0
+    import repro.core.dynamic_weight as dw
+
+    state1 = {k: jax.tree.map(jnp.asarray, v)
+              for k, v in states[0].items()}
+    batches = {
+        "images": jax.random.normal(jax.random.key(21),
+                                    (1, 2, 4, 28, 28, 1), jnp.float32),
+        "labels": jnp.zeros((1, 2, 4), jnp.int32),
+    }
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(state1["master_prev"])[0]),
+        np.asarray(jax.tree.leaves(init_master)[0]))
+
+    @jax.jit
+    def replay(state1, batches, rng):
+        mid, _, _ = tr.local_phase(state1, batches, rng)
+        ref = state1["master_prev"]  # == M_0 after round 1
+        u, hist, a, w1, w2 = dw.comm_scores_batched(
+            tr.ecfg, mid["workers"], ref, mid["u_hist"],
+            failed_recently=jnp.zeros(2, bool))
+        g2 = dw.master_schedule_weights(w2)
+        return elastic_update_batched(mid["workers"], mid["master"], w1, g2,
+                                      master_ref=ref)
+
+    want_w, want_m = replay(state1, batches, jax.random.key(41))
+    for a_, b_ in zip(jax.tree.leaves(want_m),
+                      jax.tree.leaves(states[1]["master"])):
+        np.testing.assert_array_equal(np.asarray(a_), np.asarray(b_))
+
+
+# ---------------------------------------------------------------------------
+# use_pallas plumbing: one flag, every kernel path
+# ---------------------------------------------------------------------------
+
+def test_session_coerces_model_cfg_use_pallas():
+    """RunSpec.use_pallas is the single source of truth: a model config
+    that disagrees is coerced, so the model-internal and trainer kernel
+    paths can't split."""
+    from repro.api import ElasticSession, RunSpec
+
+    cfg = get_config("paper_cnn").replace(use_pallas=True)
+    spec = RunSpec(arch="paper-cnn", model_cfg=cfg,
+                   elastic=ElasticConfig(num_workers=2),
+                   rounds=1, batch_size=4, n_data=64, n_test=32,
+                   use_pallas=False)
+    sess = ElasticSession(spec)
+    assert sess.model_cfg.use_pallas is False
+    assert sess.trainer.use_pallas is False
+
+    spec2 = RunSpec(arch="paper-cnn",
+                    elastic=ElasticConfig(num_workers=2),
+                    rounds=1, batch_size=4, n_data=64, n_test=32,
+                    use_pallas=True)
+    sess2 = ElasticSession(spec2)
+    assert sess2.model_cfg.use_pallas is True
+    assert sess2.trainer.use_pallas is True
+
+
+@pytest.mark.pallas
+def test_use_pallas_reaches_both_kernel_paths(monkeypatch):
+    """With use_pallas=True, one round drives BOTH the batched AdaHessian
+    local kernel and the batched elastic comm kernel — asserted by
+    spying on the two kernel entry points the coordinator calls."""
+    import repro.kernels.adahessian.ops as aops
+    import repro.kernels.elastic.ops as eops
+
+    called = set()
+    real_local = aops.adahessian_update_batched
+    real_comm = eops.elastic_update_batched_pallas
+
+    def spy_local(*a, **kw):
+        called.add("adahessian")
+        return real_local(*a, **kw)
+
+    def spy_comm(*a, **kw):
+        called.add("elastic")
+        return real_comm(*a, **kw)
+
+    monkeypatch.setattr(aops, "adahessian_update_batched", spy_local)
+    monkeypatch.setattr(eops, "elastic_update_batched_pallas", spy_comm)
+
+    model = build_model(get_config("paper_cnn"))
+    tr = ElasticTrainer(model, OptimizerConfig(name="adahessian", lr=1e-3),
+                        ElasticConfig(num_workers=2, tau=1,
+                                      comm_mode="fused"), use_pallas=True)
+    _round_once(tr, 2)
+    assert called == {"adahessian", "elastic"}

@@ -41,6 +41,60 @@ def test_hutchinson_unbiased_dense():
     np.testing.assert_allclose(est, jnp.diag(A), rtol=0.35, atol=0.5)
 
 
+@pytest.mark.parametrize("num_samples", [3, 4])
+def test_hessian_diag_scan_matches_unrolled(num_samples):
+    """The lax.scan probe accumulation (ISSUE-7) is bit-exact with the old
+    unrolled Python loop — same keys, same left-to-right add order."""
+    rng = np.random.default_rng(5)
+    A = jnp.asarray(rng.standard_normal((12, 12)), jnp.float32)
+    A = A @ A.T
+    params = {"x": jnp.asarray(rng.standard_normal(12), jnp.float32),
+              "y": jnp.asarray(rng.standard_normal((3, 4)), jnp.float32)}
+    loss = lambda p: quad(A)(p["x"]) + jnp.sum(jnp.square(p["y"])) * 0.5
+    gf = jax.grad(loss)
+    key = jax.random.key(7)
+
+    def unrolled(rng_, n):
+        keys = jax.random.split(rng_, n)
+        acc = None
+        for k in keys:
+            from repro.optim.hutchinson import rademacher_like as rl
+            z = rl(k, params)
+            hz = hvp(gf, params, z)
+            cur = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) * b.astype(jnp.float32),
+                z, hz)
+            acc = cur if acc is None else jax.tree.map(jnp.add, acc, cur)
+        return jax.tree.map(lambda x: x / n, acc)
+
+    got = jax.jit(lambda: hessian_diag(gf, params, key, num_samples))()
+    want = jax.jit(lambda: unrolled(key, num_samples))()
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hessian_diag_with_grad_matches_separate():
+    """linearize-shared gradient + probes == value_and_grad + jvp probes,
+    bitwise (the fused local phase relies on this)."""
+    from repro.optim.hutchinson import hessian_diag_with_grad
+
+    rng = np.random.default_rng(6)
+    A = jnp.asarray(rng.standard_normal((10, 10)), jnp.float32)
+    A = A @ A.T
+    params = {"x": jnp.asarray(rng.standard_normal(10), jnp.float32)}
+    loss = lambda p: quad(A)(p["x"])
+    gf = jax.grad(loss)
+    key = jax.random.key(11)
+    for n in (1, 3):
+        g1, d1 = jax.jit(
+            lambda p, k: hessian_diag_with_grad(gf, p, k, n))(params, key)
+        g2 = jax.jit(gf)(params)
+        d2 = jax.jit(
+            lambda p, k: hessian_diag(gf, p, k, n))(params, key)
+        for a, b in zip(jax.tree.leaves((g1, d1)), jax.tree.leaves((g2, d2))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_rademacher_values():
     z = rademacher_like(jax.random.key(0), {"a": jnp.zeros((100,))})
     assert set(np.unique(np.asarray(z["a"]))) <= {-1.0, 1.0}
