@@ -11,7 +11,10 @@ workers at capacity ∈ {8, 16} vs an exact-fit pool), and ``--what
 control`` a JSON record scoring the detector-blind closed-loop controller
 against an oracle-scheduled controller and the open loop across the
 failure scenarios (recovery delay, evictions/readmissions, master-loss
-degradation), and ``--what local`` a JSON record comparing the plain
+degradation), and ``--what serving`` a JSON record comparing continuous
+(in-flight) vs static gang batching on the same bursty MMPP trace
+(sustained req/s, p50/p99 request latency — ISSUE-8), and ``--what
+local`` a JSON record comparing the plain
 vmapped local phase against the fused local phase (ISSUE-7: shared
 gradient/HVP linearization + batched multi-worker AdaHessian update) at
 k ∈ {4, 8} — the jnp-fused row is the CPU win, the interpret-mode Pallas
@@ -25,7 +28,7 @@ def main(argv=None) -> None:
     ap.add_argument("--what", default="all",
                     choices=["all", "kernels", "comm_modes", "local",
                              "paper", "roofline", "session", "placement",
-                             "membership", "control"])
+                             "membership", "control", "serving"])
     args = ap.parse_args(argv)
 
     if args.what == "local":
@@ -56,6 +59,12 @@ def main(argv=None) -> None:
         from benchmarks import control_bench
 
         print(json.dumps(control_bench.bench_control()))
+        return
+
+    if args.what == "serving":
+        from benchmarks import serving_bench
+
+        print(json.dumps(serving_bench.bench_serving()))
         return
 
     from benchmarks import (kernels_bench, paper_figs, roofline_bench,

@@ -1,0 +1,122 @@
+"""Serving benchmark: continuous vs static batching under bursty traffic.
+
+Both modes serve the *same* synthetic MMPP trace (``repro.serving.traffic``,
+fixed seed) through the same pooled engine and jitted kernels, so the
+record isolates the **scheduling policy**:
+
+- ``continuous`` — ``Scheduler`` over ``ContinuousEngine``: requests join
+  vacant slots the tick they arrive and leave the tick they finish.
+- ``static`` — gang scheduling on the identical engine: requests are
+  grouped FIFO into batches of ``capacity``, a batch starts only after
+  its last member has arrived *and* the previous batch fully drained, and
+  nothing joins mid-flight. This is the head-of-line behaviour of the
+  classic static batch (``ServeEngine``) expressed on the pooled kernels
+  (per-request tokens are bitwise identical either way — the parity tests
+  prove it — so any latency/throughput delta is pure scheduling).
+
+Time is virtual (the clock advances by measured wall durations of engine
+calls; arrivals are trace timestamps), so the comparison is deterministic
+in structure and does not sleep. Jit warmup happens on a throwaway
+request before either timed replay.
+
+Emitted by ``benchmarks/run.py --what serving`` as one JSON record with
+sustained req/s and p50/p99 request latency per mode.
+"""
+import time
+
+import numpy as np
+
+
+def _percentiles(latencies):
+    lat = np.asarray(latencies, float)
+    return (round(float(np.percentile(lat, 50)) * 1e3, 3),
+            round(float(np.percentile(lat, 99)) * 1e3, 3))
+
+
+def _run_static_gang(engine, trace):
+    """Replay the trace with gang scheduling on the pooled engine."""
+    results = []  # (arrival, finished_at, num_tokens)
+    vnow = 0.0
+    i = 0
+    while i < len(trace):
+        batch = trace[i:i + engine.capacity]
+        i += len(batch)
+        vnow = max(vnow, batch[-1].arrival)  # wait for the full gang
+        for req in batch:
+            t0 = time.perf_counter()
+            engine.admit(req.prompt, max_new=req.max_new,
+                         eos_id=req.eos_id, rid=req.rid)
+            vnow += time.perf_counter() - t0
+        done = list(engine.drain_finished())
+        while engine.num_active:
+            t0 = time.perf_counter()
+            finished = engine.step()
+            vnow += time.perf_counter() - t0
+            done.extend(finished)
+        by_rid = {r.rid: r for r in trace}
+        results.extend((by_rid[f.rid].arrival, vnow, f.num_tokens)
+                       for f in done)
+    return results, vnow
+
+
+def bench_serving(num_requests=24, capacity=4, prompt_lens=(4, 8),
+                  max_new=12, arch="qwen3-4b"):
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.models.registry import build_model
+    from repro.nn.param import init_tree
+    from repro.serving.continuous import ContinuousEngine
+    from repro.serving.scheduler import Scheduler
+    from repro.serving.traffic import TrafficConfig, synthetic_traffic
+
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = init_tree(jax.random.key(0), model.spec)
+    max_len = max(prompt_lens) + max_new + 1
+    trace = synthetic_traffic(TrafficConfig(
+        num_requests=num_requests, rate=8.0, burst_factor=8.0,
+        prompt_lens=prompt_lens, max_new=max_new,
+        vocab_size=cfg.vocab_size, seed=0))
+    record = {"what": "serving", "arch": cfg.name,
+              "num_requests": num_requests, "capacity": capacity,
+              "prompt_lens": list(prompt_lens), "max_new": max_new,
+              "traffic": "mmpp rate=8 burst=8x seed=0"}
+
+    def fresh_engine():
+        eng = ContinuousEngine(model, params, capacity=capacity,
+                               max_len=max_len,
+                               prefill_len=max(prompt_lens))
+        # jit warmup outside both timed replays
+        eng.admit(trace[0].prompt, max_new=2)
+        eng.step()
+        eng.step()
+        eng.drain_finished()
+        return eng
+
+    sched = Scheduler(fresh_engine())
+    results = sched.run(trace)
+    toks = sum(r.num_tokens for r in results)
+    p50, p99 = _percentiles([r.latency for r in results])
+    record["continuous"] = {
+        "req_per_s": round(len(results) / sched.vnow, 3),
+        "tok_per_s": round(toks / sched.vnow, 1),
+        "latency_p50_ms": p50, "latency_p99_ms": p99,
+        "span_s": round(sched.vnow, 3)}
+
+    static_res, span = _run_static_gang(fresh_engine(), trace)
+    toks = sum(n for _, _, n in static_res)
+    p50, p99 = _percentiles([f - a for a, f, _ in static_res])
+    record["static"] = {
+        "req_per_s": round(len(static_res) / span, 3),
+        "tok_per_s": round(toks / span, 1),
+        "latency_p50_ms": p50, "latency_p99_ms": p99,
+        "span_s": round(span, 3)}
+
+    record["continuous_over_static_req_per_s"] = round(
+        record["continuous"]["req_per_s"] / record["static"]["req_per_s"],
+        3)
+    record["static_over_continuous_p99"] = round(
+        record["static"]["latency_p99_ms"]
+        / max(record["continuous"]["latency_p99_ms"], 1e-9), 3)
+    return record

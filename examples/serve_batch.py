@@ -23,6 +23,10 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="token id that finishes a row early (finished "
+                         "rows are EOS-pinned; the loop short-circuits "
+                         "once every row is done)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)  # reduced family variant on CPU
@@ -37,13 +41,13 @@ def main():
     prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)
                            ).astype("int32")
     t0 = time.time()
-    out = engine.generate(prompts, steps=args.steps)
+    out = engine.generate(prompts, steps=args.steps, eos_id=args.eos_id)
     dt = time.time() - t0
     toks = out.size
     print(f"generated {out.shape} tokens in {dt:.2f}s "
           f"({toks/dt:.0f} tok/s incl. compile)")
     t0 = time.time()
-    out = engine.generate(prompts, steps=args.steps)
+    out = engine.generate(prompts, steps=args.steps, eos_id=args.eos_id)
     dt = time.time() - t0
     print(f"warm: {out.size/dt:.0f} tok/s")
     print("first request:", out[0][:12], "...")

@@ -120,6 +120,19 @@ def read_metadata(path: str) -> dict:
         return json.load(f)["metadata"]
 
 
+def read_fingerprint(path: str) -> Optional[str]:
+    """Cheap change-detection token for pollers (serving hot-swap): the
+    manifest's mtime_ns and size, no shard I/O. ``save`` writes shards
+    before the manifest, so a new fingerprint implies the shards it
+    indexes are already complete on disk. ``None`` while no checkpoint
+    exists yet (or mid-save, before the manifest lands)."""
+    try:
+        st = os.stat(os.path.join(path, "manifest.json"))
+    except OSError:
+        return None
+    return f"{st.st_mtime_ns}:{st.st_size}"
+
+
 def restore(path: str, like=None):
     """Restore; if ``like`` given, unflatten into its treedef and dtypes.
     Leaves that were split across shards (manifest ``parts``) are

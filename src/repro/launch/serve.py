@@ -1,7 +1,19 @@
-"""Serving launcher: batched greedy generation with any --arch.
+"""Serving launcher: static reference batches or continuous batching.
 
-On real TPU hardware this would run under make_production_mesh(); on CPU it
-serves the reduced family variant. decode_32k / long_500k production
+Two modes share the arch/restore plumbing:
+
+- **static** (default): one fixed batch through ``ServeEngine.generate``,
+  two timed trials (trial 0 is labelled — it includes jit compile).
+  Throughput counts *real* generated tokens: with ``--eos-id`` set, a
+  row's EOS-pinned padding positions are excluded.
+- **continuous** (``--traffic N``): N synthetic bursty requests replayed
+  through ``Scheduler`` + ``ContinuousEngine`` on the virtual clock,
+  reporting sustained req/s and p50/p99 latency. ``--watch DIR`` attaches
+  a ``CheckpointWatcher`` so a running ``ElasticSession`` saving into DIR
+  hot-swaps the served params mid-run.
+
+On real TPU hardware this would run under make_production_mesh(); on CPU
+it serves the reduced family variant. decode_32k / long_500k production
 lowering is exercised by launch/dryrun.py.
 """
 from __future__ import annotations
@@ -16,7 +28,72 @@ from repro.checkpoint import checkpoint
 from repro.configs.base import get_config
 from repro.models.registry import build_model
 from repro.nn.param import init_tree, param_count
+from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import ServeEngine
+from repro.serving.hotswap import CheckpointWatcher
+from repro.serving.scheduler import Scheduler
+from repro.serving.traffic import TrafficConfig, synthetic_traffic
+
+
+def generated_tokens(out: np.ndarray, eos_id=None) -> int:
+    """Real generated-token count for a ``ServeEngine.generate`` output:
+    positions after a row's first EOS are pinned padding, not throughput."""
+    if eos_id is None:
+        return int(out.size)
+    total = 0
+    for row in np.asarray(out):
+        hits = np.flatnonzero(row == eos_id)
+        total += int(hits[0]) + 1 if hits.size else row.size
+    return total
+
+
+def _serve_static(model, params, args, vocab_size: int) -> None:
+    engine = ServeEngine(model, params,
+                         max_len=args.prompt_len + args.steps + 1)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, vocab_size,
+                           (args.batch, args.prompt_len)).astype("int32")
+    for trial in range(2):
+        t0 = time.time()
+        out = engine.generate(prompts, steps=args.steps,
+                              eos_id=args.eos_id)
+        dt = time.time() - t0
+        toks = generated_tokens(out, args.eos_id)
+        label = " (incl. jit compile)" if trial == 0 else ""
+        print(f"trial {trial}{label}: {toks} tokens in {dt:.2f}s "
+              f"({toks/dt:.0f} tok/s)")
+
+
+def _serve_continuous(model, params, args, vocab_size: int) -> None:
+    engine = ContinuousEngine(
+        model, params, capacity=args.capacity,
+        max_len=args.prompt_len + args.steps + 1,
+        prefill_len=args.prompt_len, eos_id=args.eos_id)
+    watcher = None
+    if args.watch:
+        watcher = CheckpointWatcher(engine, args.watch)
+        print(f"[serve] watching {args.watch} for new checkpoints "
+              f"(arch guard: {watcher.expect_arch})")
+    sched = Scheduler(engine, watcher=watcher,
+                      poll_every=args.poll_every)
+    trace = synthetic_traffic(TrafficConfig(
+        num_requests=args.traffic,
+        prompt_lens=tuple(sorted({max(1, args.prompt_len // 2),
+                                  args.prompt_len})),
+        max_new=args.steps, vocab_size=vocab_size,
+        eos_id=args.eos_id, seed=0))
+    results = sched.run(trace)
+    served = [r for r in results if r.reason != "rejected"]
+    lat = np.array([r.latency for r in served]) if served else np.zeros(1)
+    toks = sum(r.num_tokens for r in served)
+    span = max(sched.vnow, 1e-9)
+    print(f"served {len(served)}/{len(results)} requests, {toks} tokens "
+          f"over {span:.2f}s virtual ({len(served)/span:.1f} req/s, "
+          f"{toks/span:.0f} tok/s)")
+    print(f"latency p50 {np.percentile(lat, 50)*1e3:.0f}ms "
+          f"p99 {np.percentile(lat, 99)*1e3:.0f}ms")
+    if watcher is not None:
+        print(f"[serve] hot-swaps applied: {watcher.swaps_applied}")
 
 
 def main(argv=None):
@@ -28,6 +105,20 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--restore", default=None)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="token id that ends a generation (static mode "
+                         "pins finished rows; continuous mode frees the "
+                         "slot)")
+    ap.add_argument("--capacity", type=int, default=8,
+                    help="continuous mode: request-slot pool size")
+    ap.add_argument("--traffic", type=int, default=0, metavar="N",
+                    help="serve N synthetic bursty requests through the "
+                         "continuous engine (0 = static reference mode)")
+    ap.add_argument("--watch", default=None, metavar="DIR",
+                    help="continuous mode: hot-swap params from new "
+                         "checkpoints appearing in DIR")
+    ap.add_argument("--poll-every", type=int, default=8,
+                    help="decode ticks between --watch polls")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -49,17 +140,10 @@ def main(argv=None):
             print(f"[serve] restored {args.restore} "
                   f"(arch={ck_arch or '?'}, rounds={meta['rounds']})")
     print(f"serving {cfg.name}: {param_count(model.spec):,} params")
-    engine = ServeEngine(model, params,
-                         max_len=args.prompt_len + args.steps + 1)
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (args.batch, args.prompt_len)).astype("int32")
-    for trial in range(2):
-        t0 = time.time()
-        out = engine.generate(prompts, steps=args.steps)
-        dt = time.time() - t0
-        print(f"trial {trial}: {out.size} tokens in {dt:.2f}s "
-              f"({out.size/dt:.0f} tok/s)")
+    if args.traffic > 0:
+        _serve_continuous(model, params, args, cfg.vocab_size)
+    else:
+        _serve_static(model, params, args, cfg.vocab_size)
 
 
 if __name__ == "__main__":

@@ -150,6 +150,12 @@ def multihead_attention(
     - cross-attention: ``kv_x`` is the encoder memory (no rope, no causal)
     - decode: ``cache = dict(k=(B,S,KVH,D), v=...)`` and ``cache_index``
       scalar; new K/V written at ``cache_index``, attends over full cache.
+      ``cache_index`` may also be a (B,) / (B, 1) vector of *per-row*
+      write positions (continuous batching: every request sits at its own
+      decode offset) — each row's K/V then lands at its own index, and the
+      caller is responsible for passing per-row ``q_pos``/rope positions
+      to match (``DecoderLM._with_cache`` derives both from the same
+      index, so a vector index stays consistent end to end).
 
     Returns (out, new_cache).
     """
@@ -178,12 +184,21 @@ def multihead_attention(
     if cache is not None:
         # write new kv at cache_index, then attend over the whole cache
         idx = cache_index
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0)
-        )
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0)
-        )
+        if getattr(idx, "ndim", 0):
+            # per-row write positions (continuous batching): row b's new
+            # K/V lands at idx[b] of its own cache row
+            row = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+                c, u, (i,) + (0,) * (c.ndim - 1)))
+            idx_v = jnp.reshape(idx, (-1,))
+            ck = row(cache["k"], k.astype(cache["k"].dtype), idx_v)
+            cv = row(cache["v"], v.astype(cache["v"].dtype), idx_v)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0)
+            )
         new_cache = {"k": ck, "v": cv}
         k, v = ck, cv
         Skv = k.shape[1]

@@ -1,0 +1,29 @@
+"""Serving: static reference engine + continuous-batching subsystem.
+
+- :class:`~repro.serving.engine.ServeEngine` — static-batch reference.
+- :class:`~repro.serving.continuous.ContinuousEngine` — in-flight
+  batching over a fixed request-slot pool (zero-recompile join/finish).
+- :class:`~repro.serving.scheduler.Scheduler` — wait-queue admission,
+  deadlines, virtual-clock trace replay.
+- :class:`~repro.serving.hotswap.CheckpointWatcher` — live param
+  hot-swap from a running ``ElasticSession``'s checkpoint dir.
+- :func:`~repro.serving.traffic.synthetic_traffic` — bursty MMPP traces.
+"""
+from repro.serving.continuous import ContinuousEngine, FinishedRequest
+from repro.serving.engine import ServeEngine
+from repro.serving.hotswap import CheckpointWatcher, SwapEvent
+from repro.serving.scheduler import Request, RequestResult, Scheduler
+from repro.serving.traffic import TrafficConfig, synthetic_traffic
+
+__all__ = [
+    "CheckpointWatcher",
+    "ContinuousEngine",
+    "FinishedRequest",
+    "Request",
+    "RequestResult",
+    "Scheduler",
+    "ServeEngine",
+    "SwapEvent",
+    "TrafficConfig",
+    "synthetic_traffic",
+]

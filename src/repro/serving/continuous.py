@@ -1,0 +1,290 @@
+"""Continuous (in-flight) batching engine over a fixed request-slot pool.
+
+The capacity-padded-axis trick from the elastic trainer (ISSUE-5), applied
+to *requests* instead of workers: the KV cache and every jitted input is
+shaped at ``capacity`` slots, an active mask marks the live ones, and
+requests join / finish / are evicted between decode steps with **zero
+recompiles** — both jitted functions (one prefill-and-adopt, one pooled
+decode step) trace exactly once.
+
+Mechanics, per slot lifecycle:
+
+- **admit** — the prompt is right-padded to the fixed ``prefill_len``
+  bucket and prefilled alone at batch 1 into a length-``prefill_len``
+  scratch cache; the first generated token is the argmax at the *real*
+  last prompt position (``L-1``, a traced scalar — padding positions are
+  causally invisible to it) and the scratch KV is adopted into the slot's
+  row of the pool cache with one ``dynamic_update_slice`` per cache leaf.
+  Padding KV at positions ``L..prefill_len-1`` is garbage, but decode
+  overwrites position ``pos`` before any query reaches it, so the causal
+  mask keeps garbage forever ahead of — and invisible to — every real
+  query.
+- **decode** — one pooled step for all ``capacity`` rows with *per-slot*
+  cache indices (each request sits at its own offset; see
+  ``multihead_attention``'s vector ``cache_index`` path). Vacant rows
+  compute garbage that is masked out of the returned tokens; there is no
+  cross-row interaction, so their presence cannot perturb live rows.
+- **finish** — on EOS / token budget the slot is freed on the host; the
+  next admit simply overwrites its cache row.
+
+``ServeEngine`` (``repro.serving.engine``) is the static-batch reference:
+with every request arriving at t=0 at identical lengths, this engine's
+tokens are bitwise identical to ``ServeEngine.generate``
+(``tests/test_serving_continuous.py`` proves it across archs).
+
+Parameters are hot-swappable between decode steps (``swap_params``): the
+new tree has identical shapes, so the jit caches are untouched and
+in-flight requests continue on their already-written KV — the same
+one-checkpoint-stale tolerance that lets DaSGD-style delayed averaging
+train against a stale master justifies serving across a mid-request swap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.param import is_spec
+
+SUPPORTED_FAMILIES = ("dense", "moe")
+
+
+@dataclasses.dataclass(frozen=True)
+class FinishedRequest:
+    """One completed (or evicted) request, materialized on the host."""
+
+    rid: int
+    slot: int
+    tokens: np.ndarray  # (n_generated,) int32, includes the EOS token
+    reason: str  # "eos" | "length" | "evicted"
+    prompt_len: int
+    admitted_tick: int
+    finished_tick: int
+
+    @property
+    def num_tokens(self) -> int:
+        return int(self.tokens.size)
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    prompt_len: int
+    budget: int  # remaining new tokens
+    eos_id: Optional[int]
+    tokens: List[int]
+    admitted_tick: int
+
+
+class ContinuousEngine:
+    """Fixed-shape request-slot pool with in-flight batching.
+
+    ``capacity`` is the max simultaneous requests, ``max_len`` the KV
+    positions per slot (prompt + generated), ``prefill_len`` the fixed
+    prompt bucket every admission pads to. All three are baked into the
+    two jitted functions' shapes; everything else (which slots are live,
+    where each request sits, the parameters being served) is runtime data.
+    """
+
+    def __init__(self, model, params, *, capacity: int = 8,
+                 max_len: int = 256, prefill_len: int = 32,
+                 eos_id: Optional[int] = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if not 1 <= prefill_len <= max_len:
+            raise ValueError(
+                f"need 1 <= prefill_len ({prefill_len}) <= max_len "
+                f"({max_len})")
+        fam = model.cfg.family
+        if fam not in SUPPORTED_FAMILIES:
+            raise NotImplementedError(
+                f"continuous batching serves decoder-LM families "
+                f"{SUPPORTED_FAMILIES}; {model.cfg.name!r} is family "
+                f"{fam!r} (recurrent/cross-attention caches have no "
+                "per-slot positional rows to adopt into)")
+        self.model = model
+        self.params = params
+        self.capacity = capacity
+        self.max_len = max_len
+        self.prefill_len = prefill_len
+        self.eos_id = eos_id
+        # per-cache-leaf batch axis, from the spec tree's logical axis
+        # names — adoption must know where "this slot's row" lives
+        spec_leaves = jax.tree.leaves(
+            model.cache_spec(capacity, max_len), is_leaf=is_spec)
+        self._cache_baxes = []
+        for s in spec_leaves:
+            if "cache_batch" not in s.axes or "cache_seq" not in s.axes:
+                raise NotImplementedError(
+                    "continuous batching needs cache leaves with "
+                    f"cache_batch/cache_seq axes; got {s.axes}")
+            self._cache_baxes.append(s.axes.index("cache_batch"))
+        self.cache = model.init_cache(capacity, max_len)
+        # host-side pool state
+        self._tok = np.zeros((capacity, 1), np.int32)  # last token per slot
+        self._pos = np.zeros((capacity,), np.int32)  # next KV write index
+        self._active = np.zeros((capacity,), bool)
+        self._slots: Dict[int, _Slot] = {}
+        self._done: List[FinishedRequest] = []
+        self.ticks = 0  # decode steps executed
+        self.swaps = 0  # hot swaps applied
+        self._admit_fn = jax.jit(self._admit_impl)
+        self._decode_fn = jax.jit(self._decode_impl)
+
+    # -- jitted bodies -------------------------------------------------------
+    def _admit_impl(self, params, cache, toks, length, slot):
+        """(1, prefill_len) padded prompt → first token + adopted pool
+        cache. ``length``/``slot`` are traced scalars: any prompt length
+        and any slot reuse the one trace."""
+        scratch = self.model.init_cache(1, self.prefill_len)
+        logits, scratch = self.model.prefill(
+            params, {"tokens": toks}, scratch)
+        row = jax.lax.dynamic_slice(
+            logits, (0, length - 1, 0), (1, 1, logits.shape[-1]))
+        tok0 = jnp.argmax(row[:, -1], axis=-1).astype(jnp.int32)
+        pool, treedef = jax.tree.flatten(cache)
+        single = jax.tree.leaves(scratch)
+        out = []
+        for pleaf, sleaf, b in zip(pool, single, self._cache_baxes):
+            start = [0] * pleaf.ndim
+            start[b] = slot
+            out.append(jax.lax.dynamic_update_slice(
+                pleaf, sleaf.astype(pleaf.dtype), tuple(start)))
+        return tok0, jax.tree.unflatten(treedef, out)
+
+    def _decode_impl(self, params, cache, tok, idx, active):
+        """One token for every slot; per-slot cache indices ``idx``
+        ((capacity, 1) int32). Vacant rows are masked to 0 so the returned
+        tokens are independent of whatever garbage their rows hold."""
+        logits, cache = self.model.decode_step(
+            params, {"tokens": tok}, cache, idx)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return jnp.where(active, nxt, 0), cache
+
+    # -- pool introspection --------------------------------------------------
+    @property
+    def num_active(self) -> int:
+        return int(self._active.sum())
+
+    def vacant_slots(self) -> List[int]:
+        return np.flatnonzero(~self._active).tolist()
+
+    def active_slots(self) -> List[int]:
+        return np.flatnonzero(self._active).tolist()
+
+    def jit_cache_sizes(self) -> Dict[str, int]:
+        """Compiled-trace counts of the two jitted fns — the
+        zero-recompile assertion reads these (1 each after warmup)."""
+        return {"admit": self._admit_fn._cache_size(),
+                "decode": self._decode_fn._cache_size()}
+
+    # -- lifecycle -----------------------------------------------------------
+    def admit(self, prompt, *, max_new: int, eos_id=None,
+              rid: Optional[int] = None) -> int:
+        """Seat one request in a vacant slot; returns the slot. The first
+        generated token comes out of the prefill itself, so a request can
+        finish here (EOS at token 1 / max_new == 1) without ever decoding.
+        """
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        L = int(prompt.size)
+        if not 1 <= L <= self.prefill_len:
+            raise ValueError(
+                f"prompt length {L} outside 1..prefill_len="
+                f"{self.prefill_len}")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if L + max_new > self.max_len:
+            raise ValueError(
+                f"prompt {L} + max_new {max_new} overruns the slot's KV "
+                f"row (max_len={self.max_len})")
+        vacant = self.vacant_slots()
+        if not vacant:
+            raise RuntimeError("pool full: no vacant slot to admit into")
+        slot = vacant[0]
+        eos = self.eos_id if eos_id is None else eos_id
+        padded = np.zeros((1, self.prefill_len), np.int32)
+        padded[0, :L] = prompt
+        tok0, self.cache = self._admit_fn(
+            self.params, self.cache, jnp.asarray(padded), L, slot)
+        t0 = int(np.asarray(tok0)[0])
+        self._tok[slot, 0] = t0
+        self._pos[slot] = L
+        self._active[slot] = True
+        self._slots[slot] = _Slot(
+            rid=rid if rid is not None else slot, prompt_len=L,
+            budget=max_new - 1, eos_id=eos, tokens=[t0],
+            admitted_tick=self.ticks)
+        self._maybe_finish(slot)
+        return slot
+
+    def _maybe_finish(self, slot: int) -> None:
+        s = self._slots[slot]
+        if s.eos_id is not None and s.tokens[-1] == s.eos_id:
+            self._finish(slot, "eos")
+        elif s.budget <= 0:
+            self._finish(slot, "length")
+
+    def _finish(self, slot: int, reason: str) -> None:
+        s = self._slots.pop(slot)
+        self._active[slot] = False
+        self._done.append(FinishedRequest(
+            rid=s.rid, slot=slot, tokens=np.asarray(s.tokens, np.int32),
+            reason=reason, prompt_len=s.prompt_len,
+            admitted_tick=s.admitted_tick, finished_tick=self.ticks))
+
+    def evict(self, slot: int) -> None:
+        """Forcibly finish a live slot (deadline miss, shutdown); its
+        partial output is returned through ``drain_finished`` with reason
+        ``"evicted"``."""
+        if not self._active[slot]:
+            raise ValueError(f"slot {slot} is not live")
+        self._finish(slot, "evicted")
+
+    def drain_finished(self) -> List[FinishedRequest]:
+        done, self._done = self._done, []
+        return done
+
+    def step(self) -> List[FinishedRequest]:
+        """One pooled decode tick (no-op when nothing is live); returns
+        every request that finished by the end of the tick — including
+        ones that finished at admit/evict time since the last drain."""
+        if self._active.any():
+            nxt, self.cache = self._decode_fn(
+                self.params, self.cache, jnp.asarray(self._tok),
+                jnp.asarray(self._pos)[:, None],
+                jnp.asarray(self._active))
+            nxt = np.asarray(nxt)
+            self.ticks += 1
+            live = np.flatnonzero(self._active)
+            self._pos[live] += 1
+            for slot in live.tolist():
+                t = int(nxt[slot])
+                s = self._slots[slot]
+                s.tokens.append(t)
+                s.budget -= 1
+                self._tok[slot, 0] = t
+                self._maybe_finish(slot)
+        return self.drain_finished()
+
+    # -- hot swap ------------------------------------------------------------
+    def swap_params(self, new_params) -> None:
+        """Atomically flip the served parameters between decode steps.
+        The standby tree must match the live one structurally (identical
+        shapes ⇒ the jit caches are reused, zero recompiles); in-flight
+        requests keep their KV from the old parameters and continue."""
+        old = jax.tree.structure(self.params)
+        new = jax.tree.structure(new_params)
+        if old != new:
+            raise ValueError(
+                f"swap_params: tree structure mismatch ({new} != {old})")
+        for a, b in zip(jax.tree.leaves(self.params),
+                        jax.tree.leaves(new_params)):
+            if a.shape != b.shape or a.dtype != b.dtype:
+                raise ValueError(
+                    f"swap_params: leaf {b.shape}/{b.dtype} != "
+                    f"{a.shape}/{a.dtype}")
+        self.params = new_params
+        self.swaps += 1

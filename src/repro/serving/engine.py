@@ -1,8 +1,13 @@
-"""Batched serving engine: prefill + greedy decode over a KV cache.
+"""Static-batch serving engine: prefill + greedy decode over a KV cache.
 
-Small but real: continuous token-level loop with jitted prefill/decode
-steps, per-request lengths, and EOS short-circuiting on host. Used by
-examples/serve_batch.py and the decode smoke tests.
+One fixed batch in, one batch of generations out: jitted prefill/decode
+steps, EOS pinning and short-circuiting on host. This is *not* continuous
+batching — every request starts together and the batch runs to completion
+(``repro.serving.continuous`` is the in-flight engine). ``ServeEngine``
+is kept as the **bit-exactness reference**: the continuous engine must
+reproduce its tokens exactly on the degenerate all-arrive-at-t0 batch
+(``tests/test_serving_continuous.py``). Used by examples/serve_batch.py,
+launch/serve.py's static mode, and tests/test_serving.py.
 """
 from __future__ import annotations
 

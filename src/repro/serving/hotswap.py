@@ -1,0 +1,103 @@
+"""Live checkpoint hot-swap: track a running ``ElasticSession``'s master.
+
+The artifact being served is the EASGD master, which a live training
+session keeps rewriting through failures and membership churn. The
+watcher polls that checkpoint directory between decode steps, detects a
+new save via :func:`checkpoint.read_fingerprint` (manifest mtime+size —
+the manifest is written *after* the shards, so a fresh fingerprint means
+the shards it indexes are complete), validates the arch against the
+engine's config via :func:`checkpoint.read_metadata`, restores the
+multi-shard params into a **standby buffer** off the hot path, and flips
+them into the engine atomically with ``ContinuousEngine.swap_params`` —
+in-flight requests keep decoding on their existing KV.
+
+Serving a one-checkpoint-stale master while the restore runs is the same
+tolerance that makes delayed averaging (DaSGD) work in training: the
+master moves slowly relative to any single update, so brief staleness is
+benign and the swap never blocks a decode tick.
+
+Every poll that changes anything is journalled as a :class:`SwapEvent`,
+mirroring how ``control.actuator.Actuator`` journals membership actions —
+a serving run's whole swap story is replayable from ``watcher.log``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.checkpoint import checkpoint
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapEvent:
+    """Journal entry: one poll that found a new checkpoint (or rejected
+    one)."""
+
+    tick: int  # engine decode tick when the poll ran
+    fingerprint: str
+    applied: bool
+    rounds: Optional[int] = None  # training rounds recorded in metadata
+    arch: str = ""
+    note: str = ""
+
+
+class CheckpointWatcher:
+    """Polls one checkpoint dir and hot-swaps an engine's params.
+
+    ``poll()`` is designed to be called between decode steps (the
+    scheduler does this every ``poll_every`` ticks); it is a no-op unless
+    the fingerprint moved. The restore targets ``like=engine.params`` so
+    the standby tree arrives in the live tree's dtypes/structure and the
+    flip is guaranteed recompile-free.
+    """
+
+    def __init__(self, engine, path: str, *, expect_arch: Optional[str] = None):
+        self.engine = engine
+        self.path = path
+        # None → swap regardless of recorded arch (metadata-less ckpts)
+        self.expect_arch = (expect_arch if expect_arch is not None
+                            else engine.model.cfg.name)
+        self.log: List[SwapEvent] = []
+        # adopt the current fingerprint as the baseline: the engine's
+        # params are assumed to already reflect what's on disk at attach
+        # time (launch/serve.py restores before building the watcher)
+        self._seen = checkpoint.read_fingerprint(path)
+
+    @property
+    def swaps_applied(self) -> int:
+        return sum(e.applied for e in self.log)
+
+    def poll(self) -> bool:
+        """One poll; returns True iff a swap was applied."""
+        fp = checkpoint.read_fingerprint(self.path)
+        if fp is None or fp == self._seen:
+            return False
+        # re-read until quiescent: a save could land between our stat and
+        # the restore; retrying on a moved fingerprint keeps the restore
+        # consistent with exactly one manifest generation
+        meta = checkpoint.read_metadata(self.path)
+        arch = str(meta.get("arch", ""))
+        if self.expect_arch is not None and arch != self.expect_arch:
+            self._seen = fp
+            self.log.append(SwapEvent(
+                tick=self.engine.ticks, fingerprint=fp, applied=False,
+                rounds=meta.get("rounds"), arch=arch,
+                note=f"arch mismatch: checkpoint {arch!r} != engine "
+                     f"{self.expect_arch!r}"))
+            return False
+        standby, meta = checkpoint.restore(self.path, like=self.engine.params)
+        fp_after = checkpoint.read_fingerprint(self.path)
+        if fp_after != fp:
+            # a new save raced our restore; skip — the next poll sees the
+            # newer fingerprint and restores that generation instead
+            self.log.append(SwapEvent(
+                tick=self.engine.ticks, fingerprint=fp, applied=False,
+                rounds=meta.get("rounds"), arch=arch,
+                note="checkpoint changed during restore; deferred"))
+            return False
+        self.engine.swap_params(standby)
+        self._seen = fp
+        self.log.append(SwapEvent(
+            tick=self.engine.ticks, fingerprint=fp, applied=True,
+            rounds=meta.get("rounds"), arch=arch))
+        return True

@@ -40,6 +40,83 @@ def test_serve_cli(capsys):
                     "--prompt-len", "8", "--steps", "4"])
     out = capsys.readouterr().out
     assert "tok/s" in out
+    assert "incl. jit compile" in out  # trial 0 is labelled
+
+
+@pytest.mark.slow
+def test_serve_cli_eos_id_counts_real_tokens(capsys):
+    """--eos-id reaches the engine's pinning path from the CLI, and the
+    reported throughput excludes EOS-pinned padding (so it can only be
+    ≤ batch × steps)."""
+    serve_cli.main(["--arch", "qwen3-4b", "--batch", "4",
+                    "--prompt-len", "8", "--steps", "12",
+                    "--eos-id", "7"])
+    import re
+
+    out = capsys.readouterr().out
+    toks = [int(m) for m in re.findall(r"(\d+) tokens", out)]
+    assert toks and all(t <= 4 * 12 for t in toks)
+
+
+@pytest.mark.slow
+def test_serve_cli_continuous_traffic(capsys):
+    serve_cli.main(["--arch", "qwen3-4b", "--prompt-len", "8",
+                    "--steps", "6", "--capacity", "2", "--traffic", "6"])
+    out = capsys.readouterr().out
+    assert "req/s" in out and "p99" in out
+    assert "served 6/6" in out
+
+
+@pytest.mark.slow
+def test_serve_cli_restore_roundtrip_multishard(tmp_path, capsys,
+                                                monkeypatch):
+    """An ElasticSession run saves a multi-shard elastic checkpoint; the
+    serve CLI restores and serves it (no warning on the matching arch)."""
+    from repro.api import ElasticSession, RunSpec
+    from repro.checkpoint import checkpoint
+    from repro.configs.base import ElasticConfig, OptimizerConfig
+
+    ck = str(tmp_path / "ck")
+    sess = ElasticSession(RunSpec(
+        arch="stablelm-3b", smoke=True,
+        optimizer=OptimizerConfig(name="sgd", lr=0.01),
+        elastic=ElasticConfig(num_workers=2, tau=1, dynamic=True),
+        rounds=2, seed=1, n_tokens=4000, seq_len=16, batch_size=2,
+        save_path=ck))
+    sess.run()
+    monkeypatch.setattr(checkpoint, "MAX_SHARD_BYTES", 4096)
+    sess.save()
+    import os
+    assert len([f for f in os.listdir(ck) if f.endswith(".npz")]) > 1
+
+    serve_cli.main(["--arch", "stablelm-3b", "--restore", ck,
+                    "--batch", "2", "--prompt-len", "8", "--steps", "4"])
+    out = capsys.readouterr().out
+    assert "restored" in out and "rounds=2" in out and "tok/s" in out
+    assert "WARNING" not in out
+
+
+@pytest.mark.slow
+def test_serve_cli_restore_arch_mismatch_warns(tmp_path, capsys):
+    """--restore with the wrong --arch prints the mismatch warning before
+    the restore fails on the foreign parameter tree."""
+    from repro.api import ElasticSession, RunSpec
+    from repro.configs.base import ElasticConfig, OptimizerConfig
+
+    ck = str(tmp_path / "ck")
+    sess = ElasticSession(RunSpec(
+        arch="paper-cnn", optimizer=OptimizerConfig(name="sgd", lr=0.01),
+        elastic=ElasticConfig(num_workers=2, tau=1, dynamic=True),
+        rounds=1, seed=0, batch_size=4, n_data=64, n_test=32,
+        save_path=ck))
+    sess.run()
+    sess.save()
+    with pytest.raises(Exception):
+        serve_cli.main(["--arch", "qwen3-4b", "--restore", ck,
+                        "--batch", "2", "--prompt-len", "8",
+                        "--steps", "4"])
+    out = capsys.readouterr().out
+    assert "WARNING" in out and "paper-cnn" in out
 
 
 @pytest.mark.slow

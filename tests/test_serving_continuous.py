@@ -1,0 +1,444 @@
+"""Continuous batching subsystem: parity, recompiles, lifecycle, hot-swap.
+
+The ISSUE-8 acceptance criteria live here:
+
+- the continuous engine is token-bitwise-identical to the static
+  ``ServeEngine`` reference on the degenerate all-arrive-at-t0 batch,
+  across two archs;
+- requests joining/finishing mid-flight trigger zero recompiles after
+  warmup (asserted on the jit trace-cache sizes, as the PR 5 membership
+  tests do for training chunks);
+- an engine watching a running ``ElasticSession``'s checkpoint dir picks
+  up a new master without dropping in-flight requests, and post-swap
+  outputs match a fresh engine restored from the same checkpoint.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.registry import build_model
+from repro.nn.param import init_tree
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import ServeEngine
+from repro.serving.hotswap import CheckpointWatcher
+from repro.serving.scheduler import Request, Scheduler
+from repro.serving.traffic import TrafficConfig, synthetic_traffic
+
+ARCHS = ["qwen3_4b", "stablelm_3b"]
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def served(request):
+    cfg = get_config(request.param, smoke=True)
+    model = build_model(cfg)
+    params = init_tree(jax.random.key(0), model.spec)
+    return cfg, model, params
+
+
+def _prompts(n, length, vocab, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, vocab, (n, length)).astype("int32")
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the static reference
+# ---------------------------------------------------------------------------
+
+def test_degenerate_static_batch_bitwise_identical(served):
+    """All requests at t=0, identical lengths: tokens must match
+    ``ServeEngine.generate`` bit for bit (both archs)."""
+    cfg, model, params = served
+    prompts = _prompts(3, 8, cfg.vocab_size)
+    want = ServeEngine(model, params, max_len=64).generate(prompts, steps=10)
+    eng = ContinuousEngine(model, params, capacity=3, max_len=64,
+                           prefill_len=8)
+    for i in range(3):
+        eng.admit(prompts[i], max_new=10, rid=i)
+    done = []
+    while eng.num_active:
+        done += eng.step()
+    got = np.stack([f.tokens for f in sorted(done, key=lambda f: f.rid)])
+    np.testing.assert_array_equal(got, want)
+    assert all(f.reason == "length" for f in done)
+
+
+def test_midflight_join_matches_solo_run(served):
+    """A short (bucket-padded) prompt admitted while two other requests
+    are five tokens deep decodes exactly what it would decode alone."""
+    cfg, model, params = served
+    prompts = _prompts(2, 8, cfg.vocab_size, seed=1)
+    late = _prompts(1, 5, cfg.vocab_size, seed=2)
+    eng = ContinuousEngine(model, params, capacity=3, max_len=64,
+                           prefill_len=8)
+    eng.admit(prompts[0], max_new=30, rid=0)
+    eng.admit(prompts[1], max_new=30, rid=1)
+    for _ in range(5):
+        eng.step()
+    eng.admit(late[0], max_new=8, rid=2)
+    done = []
+    while 2 not in {f.rid for f in done}:
+        done += eng.step()
+    got = next(f for f in done if f.rid == 2).tokens
+    solo = ServeEngine(model, params, max_len=64).generate(late, steps=8)
+    np.testing.assert_array_equal(got, solo[0])
+
+
+# ---------------------------------------------------------------------------
+# zero recompiles across joins/finishes/swaps
+# ---------------------------------------------------------------------------
+
+def test_no_recompile_on_join_finish_swap(served):
+    """After one admit + one step, every further admit (any length, any
+    slot), finish, evict and param swap reuses the two compiled traces."""
+    cfg, model, params = served
+    eng = ContinuousEngine(model, params, capacity=4, max_len=32,
+                           prefill_len=8)
+    eng.admit(_prompts(1, 8, cfg.vocab_size)[0], max_new=4, rid=0)
+    eng.step()
+    warm = eng.jit_cache_sizes()
+    assert warm == {"admit": 1, "decode": 1}
+    eng.admit(_prompts(1, 3, cfg.vocab_size, 5)[0], max_new=20, rid=1)
+    eng.admit(_prompts(1, 6, cfg.vocab_size, 6)[0], max_new=5, rid=2)
+    for _ in range(6):
+        eng.step()  # rid 0 and 2 finish mid-flight here
+    eng.evict(eng.active_slots()[0])
+    eng.admit(_prompts(1, 1, cfg.vocab_size, 7)[0], max_new=3, rid=3)
+    swapped = jax.tree.map(lambda x: x * 1, eng.params)
+    eng.swap_params(swapped)
+    while eng.num_active:
+        eng.step()
+    assert eng.jit_cache_sizes() == warm
+
+
+# ---------------------------------------------------------------------------
+# slot lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen3_4b", smoke=True)
+    model = build_model(cfg)
+    return cfg, model, init_tree(jax.random.key(0), model.spec)
+
+
+def test_eos_frees_slot_and_slot_is_reused(qwen):
+    cfg, model, params = qwen
+    eng = ContinuousEngine(model, params, capacity=1, max_len=32,
+                           prefill_len=8)
+    p = _prompts(1, 8, cfg.vocab_size)[0]
+    # learn what the model will emit, then use token 2 as the EOS id
+    eng.admit(p, max_new=4, rid=0)
+    done = []
+    while eng.num_active:
+        done += eng.step()
+    eos = int(done[0].tokens[1])
+    eng2 = ContinuousEngine(model, params, capacity=1, max_len=32,
+                            prefill_len=8, eos_id=eos)
+    slot = eng2.admit(p, max_new=10, rid=0)
+    done = []
+    while not done:
+        done = eng2.step()
+    assert done[0].reason == "eos"
+    assert done[0].tokens[-1] == eos
+    assert done[0].tokens.size == 2
+    assert eng2.num_active == 0
+    # the freed slot is immediately reusable and decodes correctly
+    slot2 = eng2.admit(_prompts(1, 4, cfg.vocab_size, 9)[0], max_new=3,
+                       rid=1, eos_id=None)
+    assert slot2 == slot
+    done = []
+    while not done:
+        done = eng2.step()
+    assert done[0].reason == "length" and done[0].tokens.size == 3
+
+
+def test_finish_at_admit_max_new_one(qwen):
+    """max_new=1 finishes inside admit — the first token comes from the
+    prefill, no decode tick needed."""
+    cfg, model, params = qwen
+    eng = ContinuousEngine(model, params, capacity=2, max_len=32,
+                           prefill_len=8)
+    eng.admit(_prompts(1, 8, cfg.vocab_size)[0], max_new=1, rid=7)
+    assert eng.num_active == 0
+    (f,) = eng.drain_finished()
+    assert f.rid == 7 and f.reason == "length" and f.tokens.size == 1
+
+
+def test_validation_errors(qwen):
+    cfg, model, params = qwen
+    with pytest.raises(ValueError, match="capacity"):
+        ContinuousEngine(model, params, capacity=0)
+    with pytest.raises(ValueError, match="prefill_len"):
+        ContinuousEngine(model, params, max_len=8, prefill_len=16)
+    eng = ContinuousEngine(model, params, capacity=1, max_len=16,
+                           prefill_len=8)
+    p = _prompts(1, 8, cfg.vocab_size)[0]
+    with pytest.raises(ValueError, match="prompt length"):
+        eng.admit(np.zeros(9, np.int32), max_new=2)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.admit(p, max_new=0)
+    with pytest.raises(ValueError, match="overruns"):
+        eng.admit(p, max_new=9)  # 8 + 9 > 16
+    eng.admit(p, max_new=2)
+    with pytest.raises(RuntimeError, match="pool full"):
+        eng.admit(p, max_new=2)
+    eng.evict(0)
+    assert eng.drain_finished()[-1].reason == "evicted"
+    with pytest.raises(ValueError, match="not live"):
+        eng.evict(0)  # already freed
+
+
+def test_unsupported_family_rejected():
+    cfg = get_config("rwkv6_3b", smoke=True)
+    model = build_model(cfg)
+    params = init_tree(jax.random.key(0), model.spec)
+    with pytest.raises(NotImplementedError, match="family"):
+        ContinuousEngine(model, params, capacity=2, max_len=16,
+                         prefill_len=8)
+
+
+def test_swap_params_rejects_shape_mismatch(qwen):
+    cfg, model, params = qwen
+    eng = ContinuousEngine(model, params, capacity=1, max_len=16,
+                           prefill_len=8)
+    bad = jax.tree.map(lambda x: x[..., :1], eng.params)
+    with pytest.raises(ValueError, match="swap_params"):
+        eng.swap_params(bad)
+    assert eng.swaps == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_serves_bursty_trace_to_completion(qwen):
+    cfg, model, params = qwen
+    eng = ContinuousEngine(model, params, capacity=3, max_len=32,
+                           prefill_len=8)
+    trace = synthetic_traffic(TrafficConfig(
+        num_requests=12, prompt_lens=(4, 8), max_new=6,
+        vocab_size=cfg.vocab_size, seed=3))
+    sched = Scheduler(eng)
+    results = sched.run(trace)
+    assert len(results) == 12
+    assert sorted(r.rid for r in results) == list(range(12))
+    assert all(r.reason == "length" and r.num_tokens == 6 for r in results)
+    assert all(r.finished_at >= r.admitted_at >= r.arrival for r in results)
+    # every request decodes what it would decode alone (in-flight batching
+    # never perturbs a neighbour)
+    ref = ServeEngine(model, params, max_len=32)
+    by_rid = {r.rid: r for r in results}
+    for req in trace[:3]:
+        solo = ref.generate(req.prompt[None, :], steps=6)
+        np.testing.assert_array_equal(by_rid[req.rid].tokens, solo[0])
+
+
+def test_scheduler_deadline_evicts(qwen):
+    cfg, model, params = qwen
+    eng = ContinuousEngine(model, params, capacity=2, max_len=32,
+                           prefill_len=8)
+    reqs = [Request(rid=0, prompt=_prompts(1, 8, cfg.vocab_size)[0],
+                    max_new=20, arrival=0.0, deadline=0.0),
+            Request(rid=1, prompt=_prompts(1, 8, cfg.vocab_size, 4)[0],
+                    max_new=3, arrival=0.0)]
+    results = Scheduler(eng).run(reqs)
+    by_rid = {r.rid: r for r in results}
+    assert by_rid[0].reason == "evicted"
+    assert by_rid[0].num_tokens < 20  # partial output still delivered
+    assert by_rid[1].reason == "length" and by_rid[1].num_tokens == 3
+
+
+def test_scheduler_sheds_load_at_max_queue(qwen):
+    cfg, model, params = qwen
+    eng = ContinuousEngine(model, params, capacity=1, max_len=32,
+                           prefill_len=8)
+    reqs = [Request(rid=i, prompt=_prompts(1, 4, cfg.vocab_size, i)[0],
+                    max_new=2, arrival=0.0) for i in range(4)]
+    sched = Scheduler(eng, max_queue=1)
+    results = sched.run(reqs)
+    assert len(results) == 4
+    reasons = [r.reason for r in results]
+    assert sched.rejected == reasons.count("rejected") >= 1
+    assert all(r.num_tokens == 0 for r in results if r.reason == "rejected")
+    assert any(r.reason == "length" for r in results)
+
+
+def test_scheduler_admission_bounded_per_tick(qwen):
+    """A burst bigger than max_admissions_per_tick drains over several
+    ticks instead of starving the pool's decode loop."""
+    cfg, model, params = qwen
+    eng = ContinuousEngine(model, params, capacity=4, max_len=32,
+                           prefill_len=8)
+    sched = Scheduler(eng, max_admissions_per_tick=1)
+    for i in range(3):
+        sched.submit(Request(rid=i, prompt=_prompts(1, 4, cfg.vocab_size,
+                                                    i)[0],
+                             max_new=8, arrival=0.0))
+    sched.tick()
+    assert eng.num_active == 1 and len(sched.queue) == 2
+    sched.tick()
+    assert eng.num_active == 2 and len(sched.queue) == 1
+
+
+# ---------------------------------------------------------------------------
+# traffic generator
+# ---------------------------------------------------------------------------
+
+def test_traffic_deterministic_and_well_formed():
+    cfg = TrafficConfig(num_requests=50, prompt_lens=(4, 8, 12),
+                        vocab_size=100, seed=11)
+    a = synthetic_traffic(cfg)
+    b = synthetic_traffic(cfg)
+    assert len(a) == 50
+    for ra, rb in zip(a, b):
+        assert ra.arrival == rb.arrival
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+    arr = [r.arrival for r in a]
+    assert arr == sorted(arr) and arr[0] >= 0.0
+    assert {r.prompt.size for r in a} <= {4, 8, 12}
+    assert all(0 <= r.prompt.min() and r.prompt.max() < 100 for r in a)
+    # a different seed is a different trace
+    c = synthetic_traffic(TrafficConfig(num_requests=50,
+                                        prompt_lens=(4, 8, 12),
+                                        vocab_size=100, seed=12))
+    assert [r.arrival for r in c] != arr
+
+
+def test_traffic_validation():
+    with pytest.raises(ValueError, match="num_requests"):
+        synthetic_traffic(TrafficConfig(num_requests=0))
+    with pytest.raises(ValueError, match="prompt_lens"):
+        synthetic_traffic(TrafficConfig(prompt_lens=()))
+
+
+# ---------------------------------------------------------------------------
+# hot swap from a live training session's checkpoint dir
+# ---------------------------------------------------------------------------
+
+def _lm_session(save_path, seed=1, rounds=4):
+    from repro.api import ElasticSession, RunSpec
+    from repro.configs.base import ElasticConfig, OptimizerConfig
+
+    return ElasticSession(RunSpec(
+        arch="stablelm-3b", smoke=True,
+        optimizer=OptimizerConfig(name="sgd", lr=0.01),
+        elastic=ElasticConfig(num_workers=2, tau=1, dynamic=True),
+        rounds=rounds, seed=seed, n_tokens=4000, seq_len=16, batch_size=2,
+        save_path=save_path))
+
+
+def test_hotswap_tracks_running_session(tmp_path):
+    """The acceptance scenario: an engine serving traffic watches the dir
+    a live ``ElasticSession`` checkpoints into; when a new master lands
+    mid-flight the watcher swaps it in without dropping requests, and
+    post-swap outputs match a fresh engine restored from that same
+    checkpoint. Forced multi-shard (tiny MAX_SHARD_BYTES) so the standby
+    restore exercises shard reassembly."""
+    from repro.checkpoint import checkpoint
+
+    ck = str(tmp_path / "ck")
+    sess = _lm_session(ck)
+    sess.run(2)
+    sess.save()
+
+    cfg = get_config("stablelm-3b", smoke=True)
+    model = build_model(cfg)
+    params = init_tree(jax.random.key(0), model.spec)
+    eng = ContinuousEngine(model, params, capacity=2, max_len=32,
+                           prefill_len=8)
+    watcher = CheckpointWatcher(eng, ck)
+    assert watcher.poll() is False  # baseline fingerprint, nothing new
+
+    prompt = _prompts(1, 8, cfg.vocab_size)[0]
+    eng.admit(prompt, max_new=12, rid=0)
+    eng.step()
+    eng.step()
+    pre_swap = [int(t) for t in eng._slots[eng.active_slots()[0]].tokens]
+
+    sess.run(2)  # the session keeps training...
+    old_shard = checkpoint.MAX_SHARD_BYTES
+    checkpoint.MAX_SHARD_BYTES = 4096
+    try:
+        sess.save()  # ...and drops a new multi-shard master
+    finally:
+        checkpoint.MAX_SHARD_BYTES = old_shard
+    import os
+    assert len([f for f in os.listdir(ck) if f.endswith(".npz")]) > 1
+
+    assert watcher.poll() is True
+    assert eng.swaps == 1 and watcher.swaps_applied == 1
+    assert watcher.log[-1].applied and watcher.log[-1].rounds == 4
+
+    # the in-flight request was not dropped: it drains to its full budget
+    # and its pre-swap tokens are untouched
+    done = []
+    while eng.num_active:
+        done += eng.step()
+    (f,) = done
+    assert f.rid == 0 and f.tokens.size == 12
+    assert [int(t) for t in f.tokens[:len(pre_swap)]] == pre_swap
+
+    # post-swap outputs match a fresh engine restored from the checkpoint
+    fresh_params, _ = checkpoint.restore(ck, like=params)
+    fresh = ContinuousEngine(model, fresh_params, capacity=2, max_len=32,
+                             prefill_len=8)
+    p2 = _prompts(1, 6, cfg.vocab_size, 8)[0]
+    eng.admit(p2, max_new=5, rid=1)
+    fresh.admit(p2, max_new=5, rid=1)
+    got = want = []
+    while eng.num_active:
+        got = eng.step()
+    while fresh.num_active:
+        want = fresh.step()
+    np.testing.assert_array_equal(got[0].tokens, want[0].tokens)
+
+
+def test_hotswap_rejects_arch_mismatch(tmp_path):
+    """A checkpoint from a different arch is journalled and skipped — the
+    served params keep working."""
+    from repro.api import ElasticSession, RunSpec
+    from repro.configs.base import ElasticConfig, OptimizerConfig
+
+    ck = str(tmp_path / "ck")
+    cnn = ElasticSession(RunSpec(
+        arch="paper-cnn", optimizer=OptimizerConfig(name="sgd", lr=0.01),
+        elastic=ElasticConfig(num_workers=2, tau=1, dynamic=True),
+        rounds=1, seed=0, batch_size=4, n_data=64, n_test=32,
+        save_path=ck))
+    cfg = get_config("qwen3_4b", smoke=True)
+    model = build_model(cfg)
+    params = init_tree(jax.random.key(0), model.spec)
+    eng = ContinuousEngine(model, params, capacity=1, max_len=16,
+                           prefill_len=8)
+    watcher = CheckpointWatcher(eng, ck)  # dir doesn't exist yet → None fp
+    cnn.run()
+    cnn.save()
+    assert watcher.poll() is False
+    assert eng.swaps == 0
+    (ev,) = watcher.log
+    assert not ev.applied and "arch mismatch" in ev.note
+    assert watcher.poll() is False  # same bad checkpoint isn't re-read
+    assert len(watcher.log) == 1
+
+
+def test_scheduler_polls_watcher(tmp_path):
+    """The scheduler's poll_every cadence drives the watcher: a checkpoint
+    landing mid-trace is swapped in during the run."""
+    ck = str(tmp_path / "ck")
+    sess = _lm_session(ck, rounds=2)
+    sess.run()
+    cfg = get_config("stablelm-3b", smoke=True)
+    model = build_model(cfg)
+    params = init_tree(jax.random.key(0), model.spec)
+    eng = ContinuousEngine(model, params, capacity=2, max_len=48,
+                           prefill_len=8)
+    watcher = CheckpointWatcher(eng, ck)
+    sess.save()  # lands after the watcher's baseline → first poll swaps
+    sched = Scheduler(eng, watcher=watcher, poll_every=2)
+    trace = synthetic_traffic(TrafficConfig(
+        num_requests=6, prompt_lens=(4, 8), max_new=16,
+        vocab_size=cfg.vocab_size, seed=5))
+    results = sched.run(trace)
+    assert len(results) == 6
+    assert watcher.swaps_applied == 1
