@@ -71,14 +71,19 @@ class OracleController:
 
 
 def control_spec(scenario, seed, *, rounds=20, controller=None,
-                 blind=False):
-    """The acceptance-regime RunSpec shared by bench and tests."""
+                 blind=False, **ecfg_kw):
+    """The acceptance-regime RunSpec shared by bench and tests.
+
+    ``ecfg_kw`` forwards extra ElasticConfig knobs — the adversarial sweep
+    (ISSUE-9) uses it for byzantine_mode/byzantine_frac/score_clip.
+    """
     from repro.api import RunSpec
     from repro.configs.base import ElasticConfig, OptimizerConfig
 
     ec = ElasticConfig(
         num_workers=4, capacity=4, tau=4, alpha=0.5,
-        failure_prob=0.12, failure_scenario=scenario, crash_downtime=8)
+        failure_prob=0.12, failure_scenario=scenario, crash_downtime=8,
+        **ecfg_kw)
     return RunSpec(
         arch="paper-cnn", smoke=True, elastic=ec,
         optimizer=OptimizerConfig(name="sgd", lr=0.01),

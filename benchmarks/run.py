@@ -18,7 +18,11 @@ local`` a JSON record comparing the plain
 vmapped local phase against the fused local phase (ISSUE-7: shared
 gradient/HVP linearization + batched multi-worker AdaHessian update) at
 k ∈ {4, 8} — the jnp-fused row is the CPU win, the interpret-mode Pallas
-row records that path's (expected, large) CPU overhead."""
+row records that path's (expected, large) CPU overhead, and ``--what
+scenarios`` a JSON record measuring what the ISSUE-9 adversarial schedule
+channels cost per round (masked sign-flip corruption + score_clip
+quarantine, per-slot speed masks) against the channel-free clean trace at
+k ∈ {4, 8}."""
 import argparse
 import json
 
@@ -28,7 +32,8 @@ def main(argv=None) -> None:
     ap.add_argument("--what", default="all",
                     choices=["all", "kernels", "comm_modes", "local",
                              "paper", "roofline", "session", "placement",
-                             "membership", "control", "serving"])
+                             "membership", "control", "serving",
+                             "scenarios"])
     args = ap.parse_args(argv)
 
     if args.what == "local":
@@ -65,6 +70,12 @@ def main(argv=None) -> None:
         from benchmarks import serving_bench
 
         print(json.dumps(serving_bench.bench_serving()))
+        return
+
+    if args.what == "scenarios":
+        from benchmarks import scenario_bench
+
+        print(json.dumps(scenario_bench.bench_scenarios()))
         return
 
     from benchmarks import (kernels_bench, paper_figs, roofline_bench,

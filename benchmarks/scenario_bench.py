@@ -1,0 +1,66 @@
+"""Adversarial scenario-channel overhead (ISSUE-9, ``--what scenarios``).
+
+What does it cost to *carry* the new schedule channels through the jitted
+round? Three arms per worker count, one warmed-up session each:
+
+- ``clean`` — no optional channels; the pre-ISSUE-9 trace (corrupt/speed
+  are gated to None before RoundInputs, so this is also what any
+  no-corruption scenario pays: nothing).
+- ``byzantine`` — every round ships a (k,) corrupt mask and the local
+  phase runs the masked sign-flip poison (`jnp.where` per gradient leaf)
+  plus the score_clip quarantine pre-pass in comm.
+- ``hetero`` — every round ships a (k,) speed row; the local phase
+  composes the per-slot effective-τ live mask.
+
+The interesting number is the ratio to clean: the corrupt mask costs one
+select per gradient leaf, the speed row one compare per scan step — both
+should be noise against the model compute. A regression here means the
+None-specialization gate broke and the channels started reaching (or
+worse, retracing) the jit unconditionally.
+"""
+import time
+
+
+def bench_scenarios(rounds=6, ks=(4, 8)):
+    from repro.api import ElasticSession, RunSpec
+    from repro.configs.base import ElasticConfig, OptimizerConfig
+
+    record = {"what": "scenarios", "arch": "paper-cnn", "tau": 2,
+              "batch_size": 8, "rounds_timed": rounds, "workers": list(ks),
+              "arms": {}}
+    arms = {
+        "clean": dict(failure_scenario="iid", failure_prob=0.2),
+        "byzantine": dict(failure_scenario="byzantine",
+                          byzantine_frac=0.5, score_clip=0.5),
+        "hetero": dict(failure_scenario="hetero"),
+    }
+    for label, ekw in arms.items():
+        per_k = {}
+        for k in ks:
+            spec = RunSpec(
+                arch="paper-cnn",
+                optimizer=OptimizerConfig(name="sgd", lr=0.01),
+                elastic=ElasticConfig(num_workers=k, tau=2, **ekw),
+                seed=1, batch_size=8, n_data=512, n_test=64,
+                rounds=1 + rounds)
+            sess = ElasticSession(spec)
+            sess.run(1)  # compile outside the timed window
+            t0 = time.perf_counter()
+            sess.run(rounds)
+            per_k[f"k{k}_ms_per_round"] = round(
+                (time.perf_counter() - t0) / rounds * 1e3, 3)
+            if label == "byzantine":
+                assert sess.schedule.has_corruption, (
+                    "byzantine arm drew no corrupt slots — overhead arm "
+                    "would silently measure the clean path")
+            if label == "hetero":
+                assert sess.schedule.has_hetero
+        record["arms"][label] = per_k
+    for k in ks:
+        key = f"k{k}_ms_per_round"
+        clean = record["arms"]["clean"][key]
+        record[f"byzantine_overhead_k{k}"] = round(
+            record["arms"]["byzantine"][key] / clean, 3)
+        record[f"hetero_overhead_k{k}"] = round(
+            record["arms"]["hetero"][key] / clean, 3)
+    return record

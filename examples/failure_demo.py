@@ -69,14 +69,18 @@ def main(argv=None):
     sess = ElasticSession(spec)
 
     pool = " | live" if controller else ""
-    print(f"scenario={args.scenario}  (F=comm fail, S=straggle, R=restart; "
-          f"worker-0 column shown)")
-    print(f" rnd | F S R |      u0      a0     h1_0   h2_0 |  master_acc"
+    print(f"scenario={args.scenario}  (F=comm fail, S=straggle, R=restart, "
+          f"C=corrupt; worker-0 column shown)")
+    if sess.schedule is not None and sess.schedule.has_hetero:
+        print("persistent slot speeds: "
+              f"{np.asarray(sess.schedule.speed[0]).round(3).tolist()}")
+    print(f" rnd | F S R C |      u0      a0     h1_0   h2_0 |  master_acc"
           f"{pool}")
     for rec in sess.run_iter():
         pool = (f" | {rec.num_active}/{sess.capacity}" if controller else "")
         print(f"  {rec.round:2d} | {int(rec.fail[0])} "
               f"{int(rec.straggle[0])} {int(rec.restart[0])} "
+              f"{int(rec.corrupt[0])} "
               f"| {float(rec.u[0]):8.3f} {float(rec.score[0]):8.4f} "
               f"{float(rec.h1[0]):6.3f} {float(rec.h2[0]):6.3f} |"
               f"    {rec.eval_acc:.3f}{pool}")

@@ -200,6 +200,11 @@ class RoundRecord:
     loss_w: Optional[np.ndarray] = None
     round_ms: float = 0.0
     dispatch_ms: float = 0.0
+    # (cap,) bool — byzantine slots this round (ISSUE-9), echoed from the
+    # schedule like fail/straggle/restart (all-False under detector_blind
+    # or when the scenario has no corruption channel). Trails the field
+    # list with a default so older positional constructions keep working.
+    corrupt: Optional[np.ndarray] = None
 
     @property
     def num_active(self) -> int:
@@ -626,6 +631,11 @@ class ElasticSession:
         # even when an individual chunk happens to be event-free
         straggle = sched.straggle[lo:hi] if sched.has_stragglers else None
         restart = sched.restart[lo:hi] if sched.has_restarts else None
+        # adversarial channels (ISSUE-9) gate on has_* like the masks
+        # above, so an all-False corrupt array / all-ones speed array never
+        # reaches RoundInputs and the corruption-free trace is untouched
+        corrupt = sched.corrupt[lo:hi] if sched.has_corruption else None
+        speed = sched.speed[lo:hi] if sched.has_hetero else None
         active = (self._membership[lo:hi] if self._membership is not None
                   else None)
         join = self._join_rows[lo:hi] if self._join_rows is not None else None
@@ -640,7 +650,9 @@ class ElasticSession:
                 else jnp.asarray(straggle[0]),
                 restart=None if restart is None else jnp.asarray(restart[0]),
                 active=None if active is None else jnp.asarray(active[0]),
-                join=None if join is None else jnp.asarray(join[0]))
+                join=None if join is None else jnp.asarray(join[0]),
+                corrupt=None if corrupt is None else jnp.asarray(corrupt[0]),
+                speed=None if speed is None else jnp.asarray(speed[0]))
             step = (self.trainer.round_step_sharded if self._sharded
                     else self.trainer.round_step)
             self.state, m = step(self.state, inputs)
@@ -655,7 +667,9 @@ class ElasticSession:
                 straggle=None if straggle is None else jnp.asarray(straggle),
                 restart=None if restart is None else jnp.asarray(restart),
                 active=None if active is None else jnp.asarray(active),
-                join=None if join is None else jnp.asarray(join))
+                join=None if join is None else jnp.asarray(join),
+                corrupt=None if corrupt is None else jnp.asarray(corrupt),
+                speed=None if speed is None else jnp.asarray(speed))
             chunk = (self.trainer.round_chunk_sharded if self._sharded
                      else self.trainer.round_chunk)
             self.state, m = chunk(self.state, inputs)
@@ -668,6 +682,7 @@ class ElasticSession:
         dispatch_ms = (t1 - t0) * 1e3
         self.round = hi
         echo = self._echo
+        no_corrupt = np.zeros(self.capacity, bool)
         records = []
         for i, r in enumerate(range(lo, hi)):
             ev_loss = ev_acc = None
@@ -679,6 +694,8 @@ class ElasticSession:
                 h1=m["h1"][i], h2=m["h2"][i],
                 fail=echo.fail[r], straggle=echo.straggle[r],
                 restart=echo.restart[r],
+                corrupt=(echo.corrupt[r] if echo.corrupt is not None
+                         else no_corrupt),
                 eval_loss=ev_loss, eval_acc=ev_acc,
                 active=(self._membership[r] if self._membership is not None
                         else np.ones(self.capacity, bool)),
@@ -709,7 +726,7 @@ class ElasticSession:
                 ev_loss, ev_acc = self.evaluate()
             records.append(RoundRecord(
                 round=r, loss=float(loss[i]), u=z, score=z, h1=z, h2=z,
-                fail=zb, straggle=zb, restart=zb,
+                fail=zb, straggle=zb, restart=zb, corrupt=zb,
                 eval_loss=ev_loss, eval_acc=ev_acc, active=~zb,
                 round_ms=round_ms, dispatch_ms=dispatch_ms))
         return records

@@ -125,8 +125,14 @@ INPUT_SHAPES = {
 
 # Failure scenario catalogue (generators live in repro/core/scenarios.py;
 # kept here so ElasticConfig can validate without a circular import).
+# "hetero" (persistent per-slot speeds) and "byzantine" (corrupt-gradient
+# slots) are adversarial extensions beyond the paper's §VI fault model;
+# trace replay is deliberately NOT in this catalogue — a recorded trace is
+# loaded with `TraceScenario`/`read_trace` and attached via
+# `RunSpec.schedule` (CLI: `--trace`), since it carries its own
+# rounds/capacity and ignores the generator knobs below.
 FAILURE_SCENARIOS = ("iid", "burst", "correlated", "straggler",
-                     "crash_restart")
+                     "crash_restart", "hetero", "byzantine")
 
 # Membership scenario catalogue (planned worker-pool resize streams; the
 # generators live next to the failure scenarios in repro/core/scenarios.py).
@@ -189,6 +195,32 @@ class ElasticConfig:
     fault_groups: int = 2             # correlated: number of co-failing racks
     crash_downtime: int = 3           # crash_restart: rounds down per crash
     straggler_tau_scale: float = 0.5  # straggler: fraction of τ it completes
+    # "hetero": persistent per-slot speed distribution. Each slot draws one
+    # speed in (0, 1] at schedule time and keeps it for the whole run; the
+    # local phase gives slot i max(1, round(speed_i * tau)) steps per round
+    # (distinct from transient straggler masks, which also stale the score).
+    hetero_dist: str = "lognormal"    # lognormal | bimodal
+    hetero_sigma: float = 0.6         # lognormal: speed = min(1, exp(sigma·z))
+    hetero_slow_frac: float = 0.25    # bimodal: P(slot is slow)
+    hetero_slow_scale: float = 0.25   # bimodal: speed of slow slots
+    # "byzantine": persistent corrupt-gradient slots. Each slot is byzantine
+    # with prob byzantine_frac (at least one slot stays honest); honest slots
+    # still suffer iid comm failures at failure_prob, so the corrupt and fail
+    # masks are disjoint by construction. The coordinator applies the
+    # corruption to gradients inside the jitted local phase.
+    byzantine_frac: float = 0.25      # P(slot is corrupt) — persistent
+    byzantine_mode: str = "sign_flip"  # sign_flip | scale | noise
+    byzantine_scale: float = 5.0      # scale factor / noise std
+    # Robustness clamp for dynamic weighting (beyond-paper; see
+    # docs/paper_map.md deviation #10). The paper's h2 map gives *full*
+    # weight alpha to any worker whose score is positive — including a
+    # byzantine slot running away from the master — so a diverging poisoned
+    # worker pollutes the master at the same rate as a healthy one. With
+    # score_clip > 0, the master refuses the pull (w2 = 0) from any worker
+    # whose raw score exceeds +score_clip. 0 disables the clamp and is
+    # bit-identical to the paper's maps. Applies to both comm backends
+    # (the clamp lives in dynamic_weight.weights_for).
+    score_clip: float = 0.0
     # Membership scenario engine (repro/core/scenarios.py): a planned
     # (rounds, capacity) active-mask stream riding alongside the failure
     # masks. "static" keeps the initial num_workers slots live; scale_up /
@@ -241,6 +273,36 @@ class ElasticConfig:
                 f"capacity={self.capacity} must be >= "
                 f"num_workers={self.num_workers} (capacity pads the worker "
                 "axis; it cannot truncate the initial membership)")
+        if self.hetero_dist not in ("lognormal", "bimodal"):
+            raise ValueError(
+                f"hetero_dist must be 'lognormal' or 'bimodal', "
+                f"got {self.hetero_dist!r}")
+        if self.hetero_sigma <= 0:
+            raise ValueError(
+                f"hetero_sigma must be > 0, got {self.hetero_sigma}")
+        if not 0.0 <= self.hetero_slow_frac <= 1.0:
+            raise ValueError(
+                f"hetero_slow_frac must be in [0, 1], "
+                f"got {self.hetero_slow_frac}")
+        if not 0.0 < self.hetero_slow_scale <= 1.0:
+            raise ValueError(
+                f"hetero_slow_scale must be in (0, 1], "
+                f"got {self.hetero_slow_scale}")
+        if not 0.0 <= self.byzantine_frac < 1.0:
+            raise ValueError(
+                f"byzantine_frac must be in [0, 1) — at least one slot "
+                f"must stay honest — got {self.byzantine_frac}")
+        if self.byzantine_mode not in ("sign_flip", "scale", "noise"):
+            raise ValueError(
+                f"byzantine_mode must be 'sign_flip', 'scale' or 'noise', "
+                f"got {self.byzantine_mode!r}")
+        if self.byzantine_scale <= 0:
+            raise ValueError(
+                f"byzantine_scale must be > 0, got {self.byzantine_scale}")
+        if self.score_clip < 0:
+            raise ValueError(
+                f"score_clip must be >= 0 (0 disables the clamp), "
+                f"got {self.score_clip}")
         if self.membership_scenario not in MEMBERSHIP_SCENARIOS:
             raise ValueError(
                 f"membership_scenario must be one of {MEMBERSHIP_SCENARIOS},"

@@ -47,6 +47,21 @@ yanked, which shows up in one of two ways depending on where it died:
   unremarkable in a calm pool but glaringly frozen while everyone else
   moves by ≈ 1.0.
 
+Byzantine slots (ISSUE-9) trip **adrift** too, for the same mechanical
+reason a cut worker does: once ``ElasticConfig.score_clip`` makes the
+master refuse a gradient-corrupted worker's pulls, that worker drifts
+without the yank-back, and ``du`` goes solidly positive. Measured on the
+acceptance regime (noise-mode corruption, byzantine_frac=0.5,
+score_clip=0.5, seeds 1–3, 20 rounds): 5/5 corrupt slots flagged
+failed-suspect, ≤ 2 false flags per run — the FPs cluster in rounds 9–11
+where the clip's warm-up freeze (every slot starts refused while the
+score history fills) leaves honest slots with unusually jumpy telemetry.
+Without the clip the detector largely misses noise-mode corruption: the
+full-α elastic pull holds the noisy worker at a fixed elevated distance,
+``du`` keeps flipping sign, and no drift accumulates — the clip is what
+converts "polluting the master" into the observable cut-drift signature
+(``tests/test_control.py::TestDetectorSweep`` encodes both floors).
+
 Scope: both rules lean on cross-sectional statistics of the live pool
 (median du, pool mobility), which assumes a strict *minority* of the pool
 is faulty at once. When half or more of the live slots fail concurrently,

@@ -135,6 +135,14 @@ class RoundInputs:
     - ``join``: optional (k,) bool — slots (re)joining the pool this
       round; their params are re-seated from the master before the local
       phase (same cold-start op as a crash-restart rejoin).
+    - ``corrupt``: optional (k,) bool — byzantine slots (ISSUE-9): their
+      gradients are adversarially corrupted every local τ-step
+      (``ElasticConfig.byzantine_mode``). They still sync — a poisoned
+      node does not announce itself.
+    - ``speed``: optional (k,) float32 in (0, 1] — persistent per-slot
+      speeds (ISSUE-9): slot i completes ``max(1, round(speed·τ))`` local
+      steps this round. Unlike ``straggle`` this does not stale the
+      worker's score against ``master_prev``.
     """
 
     batches: Any
@@ -145,6 +153,8 @@ class RoundInputs:
     restart: Optional[jax.Array] = None
     active: Optional[jax.Array] = None
     join: Optional[jax.Array] = None
+    corrupt: Optional[jax.Array] = None
+    speed: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass(eq=False)  # hash by id → usable as a static jit arg
@@ -238,10 +248,42 @@ class ElasticTrainer:
             state["workers"], state["master"])
         return dict(state, workers=workers)
 
+    # -- byzantine gradient corruption (ISSUE-9) ---------------------------------
+    def _poison(self, grads, rng):
+        """The adversarial gradient a byzantine worker reports, per
+        ``ecfg.byzantine_mode`` (static — the trace only ever contains one
+        mode's ops): ``sign_flip`` ascends the loss, ``scale`` overshoots
+        by ``byzantine_scale``×, ``noise`` adds N(0, byzantine_scale²) per
+        element. Noise keys are folded from the worker's step key, so the
+        honest PRNG stream is untouched."""
+        mode, c = self.ecfg.byzantine_mode, self.ecfg.byzantine_scale
+        if mode == "sign_flip":
+            return jax.tree.map(jnp.negative, grads)
+        if mode == "scale":
+            return jax.tree.map(lambda g: (c * g).astype(g.dtype), grads)
+        leaves, treedef = jax.tree.flatten(grads)
+        keys = jax.random.split(jax.random.fold_in(rng, 0x6B7A), len(leaves))
+        return jax.tree.unflatten(treedef, [
+            g + c * jax.random.normal(kk, g.shape, g.dtype)
+            for g, kk in zip(leaves, keys)])
+
+    def _corrupt_grads(self, grads, corrupt_i, rng):
+        """One worker's gradients with the byzantine corruption selected in
+        where ``corrupt_i`` (scalar bool) is True. Only the gradient
+        channel is attacked; the Hutchinson curvature estimate rides
+        through untouched (AdaHessian preconditions by |diag|, which
+        sign_flip would not change anyway — the gradient is the attack
+        surface that reaches the master)."""
+        bad = self._poison(grads, rng)
+        return jax.tree.map(lambda b, g: jnp.where(corrupt_i, b, g),
+                            bad, grads)
+
     # -- local phase ------------------------------------------------------------
-    def _one_step(self, params, opt_state, batch, rng):
+    def _one_step(self, params, opt_state, batch, rng, corrupt_i=None):
         loss_fn = lambda p: self.model.loss(p, batch)[0]
         loss, grads = jax.value_and_grad(loss_fn)(params)
+        if corrupt_i is not None:
+            grads = self._corrupt_grads(grads, corrupt_i, rng)
         extras = None
         if self.opt.needs_hessian:
             extras = {
@@ -269,7 +311,8 @@ class ElasticTrainer:
             lambda h: spatial_average(h, self.opt_cfg.spatial_block), diag)
         return loss, grads, hs
 
-    def _fused_local_step(self, params, opt_state, batch, rngs, k_loc, axis):
+    def _fused_local_step(self, params, opt_state, batch, rngs, k_loc, axis,
+                          corrupt=None):
         """One τ-step for all k workers with the update batched (ISSUE-7):
         per-worker gradients + averaged Hessian diagonals, then a single
         multi-worker AdaHessian step over the stacked trees — the Pallas
@@ -288,6 +331,10 @@ class ElasticTrainer:
             hs = jax.tree.map(lambda x: x[None], hs)
         else:
             loss, grads, hs = jax.vmap(self._grads_one)(params, batch, rngs)
+        if corrupt is not None:
+            # per-worker corruption on the stacked gradient trees, same
+            # semantics as the plain path's in-step corruption
+            grads = jax.vmap(self._corrupt_grads)(grads, corrupt, rngs)
         new_p, new_o = adahessian_update_batched(
             params, grads, hs, opt_state, self.opt_cfg,
             use_kernel=self.use_pallas and axis is None,
@@ -295,13 +342,25 @@ class ElasticTrainer:
         return new_p, new_o, loss
 
     def local_phase(self, state, batches, rng, straggle=None, active=None,
-                    axis=None):
+                    axis=None, corrupt=None, speed=None):
         """batches: pytree with leading (τ, k, ...) axes (k = slot capacity).
 
         ``straggle``: optional (k,) bool — straggling workers are slow, not
         dead: they complete only the first
         ``max(1, round(straggler_tau_scale·τ))`` local steps; params and
         optimizer state freeze for the rest of the phase.
+
+        ``corrupt``: optional (k,) bool — byzantine slots: every local
+        τ-step their gradients are replaced by the adversarial variant
+        (``_corrupt_grads``). Applied on both the plain and fused local
+        paths; ``None`` keeps the corruption-free trace bit-identical
+        (the branch is specialized away, tests/test_adversarial.py).
+
+        ``speed``: optional (k,) float32 in (0, 1] — persistent per-slot
+        speeds: slot i runs ``max(1, round(speed·τ))`` steps and freezes
+        for the rest of the phase, composing with (not replacing) the
+        transient straggler mask. Distinct semantics: a straggler also
+        scores against a stale master, a slow-but-healthy node does not.
 
         ``active``: optional (k,) bool — live-membership mask. Inactive
         slots freeze for the whole phase (params/optimizer unchanged) and
@@ -323,6 +382,11 @@ class ElasticTrainer:
         tau = jax.tree.leaves(batches)[0].shape[0]
         k_loc = jax.tree.leaves(batches)[0].shape[1]
         tau_eff = max(1, round(self.ecfg.straggler_tau_scale * tau))
+        # persistent heterogeneity: per-slot step budget for this round
+        # (computed once — speed is constant across the τ scan)
+        speed_steps = (None if speed is None else
+                       jnp.maximum(1, jnp.round(speed * tau))
+                       .astype(jnp.int32))
 
         def tau_step(carry, inp):
             params, opt_state = carry
@@ -333,7 +397,8 @@ class ElasticTrainer:
                 rngs = jax.lax.dynamic_slice_in_dim(rngs, i0, k_loc)
             if self._fused_local:
                 new_p, new_o, loss = self._fused_local_step(
-                    params, opt_state, batch_t, rngs, k_loc, axis)
+                    params, opt_state, batch_t, rngs, k_loc, axis,
+                    corrupt=corrupt)
             elif axis is not None and k_loc == 1:
                 # one worker per shard: run it unbatched. A vmap over a
                 # singleton worker axis lowers the conv weight-gradient
@@ -342,19 +407,28 @@ class ElasticTrainer:
                 # matches any width >= 2 bit-for-bit
                 # (tests/test_placement.py holds the line).
                 sq = lambda t: jax.tree.map(lambda x: x[0], t)
-                p1, o1, loss = self._one_step(sq(params), sq(opt_state),
-                                              sq(batch_t), rngs[0])
+                p1, o1, loss = self._one_step(
+                    sq(params), sq(opt_state), sq(batch_t), rngs[0],
+                    None if corrupt is None else corrupt[0])
                 new_p = jax.tree.map(lambda x: x[None], p1)
                 new_o = jax.tree.map(lambda x: x[None], o1)
                 loss = loss[None]
+            elif corrupt is not None:
+                new_p, new_o, loss = jax.vmap(self._one_step)(
+                    params, opt_state, batch_t, rngs, corrupt)
             else:
                 new_p, new_o, loss = jax.vmap(self._one_step)(
                     params, opt_state, batch_t, rngs)
-            # frozen steps (slow stragglers past their reduced τ, inactive
-            # slots) contribute neither updates nor loss metrics
+            # frozen steps (slow stragglers past their reduced τ, slots past
+            # their heterogeneous speed budget, inactive slots) contribute
+            # neither updates nor loss metrics
             live = None
             if straggle is not None:
                 live = jnp.logical_or(~straggle, t < tau_eff)
+            if speed_steps is not None:
+                live_sp = t < speed_steps
+                live = live_sp if live is None else jnp.logical_and(live,
+                                                                    live_sp)
             if active is not None:
                 live = active if live is None else jnp.logical_and(live,
                                                                    active)
@@ -433,6 +507,19 @@ class ElasticTrainer:
             if straggle is not None:
                 u_t = jnp.where(st_i, dw.log_distance(w_i, stale_master),
                                 u_t)
+            if ecfg.score_clip > 0:
+                # quarantine (ISSUE-9): a worker whose distance left
+                # float32 range (diverged byzantine slot) is re-seated to
+                # the master here, so the refused exchange below never
+                # computes 0·inf and the u-history stays finite. The
+                # pushed u is exactly log_distance(master, master); the
+                # resulting huge positive score keeps the slot refused
+                # while it stays suspicious.
+                quar = ~jnp.isfinite(u_t)
+                w_i = jax.tree.map(
+                    lambda w, m: jnp.where(quar, m.astype(w.dtype), w),
+                    w_i, master)
+                u_t = jnp.where(quar, jnp.log(jnp.float32(1e-30)), u_t)
             hist_new = dw.push_history(hist_i, u_t)
             if active is not None:
                 hist_new = jnp.where(act_i, hist_new, hist_i)
@@ -503,8 +590,23 @@ class ElasticTrainer:
         # the master itself and every expression below is unchanged.
         ref = (state.get("master_prev", master) if ecfg.staleness
                else master)
+        workers_in = state["workers"]
+        if ecfg.score_clip > 0:
+            # quarantine (ISSUE-9), mirroring the sequential scan: a
+            # worker whose log-distance left float32 range is re-seated to
+            # the scoring reference before anything else reads it, so the
+            # refused master reduction never multiplies 0·inf and the
+            # history push (inside comm_scores_batched, which re-measures
+            # the sanitized workers) records the exact re-seat distance.
+            u0 = dw.log_distance_batched(workers_in, ref)
+            quar = ~jnp.isfinite(u0)
+            workers_in = jax.tree.map(
+                lambda w, m: jnp.where(
+                    quar.reshape((-1,) + (1,) * (w.ndim - 1)),
+                    m.astype(w.dtype)[None], w),
+                workers_in, ref)
         u, hist, a, w1, w2 = dw.comm_scores_batched(
-            ecfg, state["workers"], ref, state["u_hist"],
+            ecfg, workers_in, ref, state["u_hist"],
             failed_recently=failed_recent,
             stale_master=(None if straggle is None
                           else state.get("master_prev", master)),
@@ -523,15 +625,17 @@ class ElasticTrainer:
             a = jnp.where(active, a, 0.0)
         g2 = dw.master_schedule_weights(w2, axis_name=axis)
         master_ref = ref if ecfg.staleness else None
+        # workers_in == state["workers"] unless the score_clip quarantine
+        # re-seated a diverged slot above
         if self.use_pallas and axis is None:
             from repro.kernels.elastic.ops import elastic_update_batched_pallas
 
             workers, master = elastic_update_batched_pallas(
-                state["workers"], master, w1, g2, master_ref=master_ref,
+                workers_in, master, w1, g2, master_ref=master_ref,
                 interpret=jax.default_backend() != "tpu")
         else:
             workers, master = elastic_update_batched(
-                state["workers"], master, w1, g2, axis_name=axis,
+                workers_in, master, w1, g2, axis_name=axis,
                 master_ref=master_ref)
         metrics = {"u": u, "score": a, "h1": w1, "h2": w2}
         return dict(state, workers=workers, master=master,
@@ -557,7 +661,9 @@ class ElasticTrainer:
             state = self.apply_restarts(state, reseat)
         state, loss, loss_w = self.local_phase(state, inputs.batches,
                                                inputs.rng, inputs.straggle,
-                                               inputs.active, axis=axis)
+                                               inputs.active, axis=axis,
+                                               corrupt=inputs.corrupt,
+                                               speed=inputs.speed)
         state, metrics = self.comm_phase(state, inputs.fail,
                                          inputs.failed_recent,
                                          inputs.straggle, inputs.active,
@@ -624,7 +730,8 @@ class ElasticTrainer:
             rng=rep,
             fail=wrk, failed_recent=mask(inputs.failed_recent),
             straggle=mask(inputs.straggle), restart=mask(inputs.restart),
-            active=mask(inputs.active), join=mask(inputs.join))
+            active=mask(inputs.active), join=mask(inputs.join),
+            corrupt=mask(inputs.corrupt), speed=mask(inputs.speed))
         met_spec = {"u": wrk, "score": wrk, "h1": wrk, "h2": wrk,
                     "loss": rep, "loss_w": wrk}
         return state_spec, in_spec, met_spec

@@ -16,6 +16,17 @@ master model, then piece-wise-linear maps h1/h2 replacing EASGD's fixed α:
 
 with threshold k < 0. Worker update uses h1, master update uses h2
 (eqs. 12–13). Healthy workers (small positive scores) recover exact EASGD.
+
+Robustness clamp (beyond-paper, ISSUE-9): note h2 gives the *full* α to any
+worker with a positive score — including a byzantine worker whose distance
+grows without bound, which therefore pollutes the master at the same rate
+as a healthy one. ``ElasticConfig.score_clip > 0`` zeroes h2 for scores
+above +score_clip (the master refuses pulls from workers diverging too
+fast); 0 keeps the paper's maps bit-identically. Applied in
+:func:`weights_for`, so it covers both comm backends. Honest raw scores
+hover within a few multiples of |score_k| even under failures, so a clip
+around 10·|score_k| separates cleanly (measured in
+tests/test_adversarial.py).
 """
 from __future__ import annotations
 
@@ -134,7 +145,14 @@ def master_schedule_weights(w2: jax.Array, *, axis_name=None) -> jax.Array:
 
 
 def weights_for(cfg: ElasticConfig, a, *, failed_recently=None):
-    """(h1, h2) for a raw score; supports fixed-α and oracle modes."""
+    """(h1, h2) for a raw score; supports fixed-α and oracle modes.
+
+    Dynamic mode applies the ``score_clip`` robustness clamp (module
+    docstring): runaway scores above +score_clip get w2 = 0 — the worker
+    may still pull itself toward the master (h1 untouched; that only helps
+    re-anchor it), but the master refuses the exchange. Fixed-α and oracle
+    modes are deliberately exempt: they are the paper's baselines.
+    """
     if cfg.oracle:
         assert failed_recently is not None
         w1 = jnp.where(failed_recently, 1.0, cfg.alpha)
@@ -143,4 +161,12 @@ def weights_for(cfg: ElasticConfig, a, *, failed_recently=None):
     if not cfg.dynamic:
         one = jnp.ones_like(jnp.asarray(a, jnp.float32))
         return cfg.alpha * one, cfg.alpha * one
-    return h1(a, cfg.alpha, cfg.score_k), h2(a, cfg.alpha, cfg.score_k)
+    w1 = h1(a, cfg.alpha, cfg.score_k)
+    w2 = h2(a, cfg.alpha, cfg.score_k)
+    if cfg.score_clip > 0:
+        # written as `a <= clip keeps w2` so a non-finite score (a worker
+        # already diverged past float32 range) is also refused — NaN/inf
+        # fail the comparison
+        w2 = jnp.where(jnp.asarray(a, jnp.float32) <= cfg.score_clip,
+                       w2, 0.0)
+    return w1, w2

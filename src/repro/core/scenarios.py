@@ -40,6 +40,23 @@ so every scenario is jit-compatible by construction:
     active→inactive is a **leave**: it simply freezes. The paper's §VI
     crash/restart experiments only ever suppress communication; live
     resize is a deliberate extension beyond §VI (see docs/paper_map.md).
+``corrupt``
+    optional byzantine mask (ISSUE-9): the worker's *gradients* are
+    adversarially corrupted this round (sign-flip / scale / noise,
+    ``ElasticConfig.byzantine_mode``), applied by the coordinator inside
+    the jitted local phase. The worker still syncs — a poisoned node does
+    not announce itself — which is exactly what stresses the h1/h2
+    log-distance score. Disjoint from ``fail`` by construction (a corrupt
+    round that also dropped comm would be invisible to the master and
+    prove nothing). ``None`` = no corruption anywhere (the masking-free
+    fast path; the jitted round specializes the branch away).
+``speed``
+    optional (rounds, k) float32 per-slot speed in (0, 1]: slot i completes
+    ``max(1, round(speed * tau))`` local steps per round. Persistent
+    heterogeneity (the ``hetero`` scenario repeats one row) as opposed to
+    the transient ``straggle`` mask — a permanently slow node is a
+    capacity fact, not a fault, so it does *not* stale the worker's score
+    the way straggling does. ``None`` = homogeneous full-τ pool.
 
 Scenario catalogue (names in ``repro.configs.base.FAILURE_SCENARIOS``):
 
@@ -54,12 +71,26 @@ Scenario catalogue (names in ``repro.configs.base.FAILURE_SCENARIOS``):
 ``crash_restart`` renewal process: a crash takes the worker down for
                 ``crash_downtime`` rounds, then it rejoins reset to the
                 master; stationary down-fraction = ``failure_prob``
+``hetero``      no faults; persistent per-slot speeds drawn once from a
+                lognormal or bimodal distribution (``hetero_*`` knobs)
+``byzantine``   persistent corrupt-gradient slots (Bernoulli
+                ``byzantine_frac`` per slot, ≥ 1 honest slot guaranteed);
+                honest slots still fail iid at ``failure_prob``
 =============== ============================================================
+
+Trace replay (:class:`TraceScenario`, ``read_trace`` / ``write_trace``)
+deliberately sits outside the catalogue: a recorded JSON-lines trace
+carries its own rounds/capacity/channels and replays bit-identically,
+ignoring the generator knobs. ``launch/train.py --dump-trace`` records any
+live run (including controller-driven membership edits) and ``--trace``
+replays it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import json
+from pathlib import Path
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -79,6 +110,8 @@ class ScenarioSchedule:
     straggle: np.ndarray
     restart: np.ndarray
     active: Optional[np.ndarray] = None
+    corrupt: Optional[np.ndarray] = None
+    speed: Optional[np.ndarray] = None
 
     def __post_init__(self):
         assert self.fail.shape == self.straggle.shape == self.restart.shape
@@ -88,6 +121,18 @@ class ScenarioSchedule:
             assert self.active.dtype == bool
             assert self.active.any(axis=1).all(), \
                 "every round needs at least one live worker"
+        if self.corrupt is not None:
+            assert self.corrupt.shape == self.fail.shape
+            assert self.corrupt.dtype == bool
+            assert not (self.corrupt & self.fail).any(), \
+                "corrupt and fail masks must be disjoint: a corrupt round " \
+                "that also drops comm never reaches the master"
+        if self.speed is not None:
+            assert self.speed.shape == self.fail.shape
+            assert self.speed.dtype == np.float32, \
+                f"speed must be float32, got {self.speed.dtype}"
+            assert (self.speed > 0).all() and (self.speed <= 1).all(), \
+                "speeds must be in (0, 1]"
 
     @property
     def rounds(self) -> int:
@@ -104,6 +149,21 @@ class ScenarioSchedule:
     @property
     def has_restarts(self) -> bool:
         return bool(self.restart.any())
+
+    @property
+    def has_corruption(self) -> bool:
+        """True when any (round, slot) cell is corrupt. An all-False
+        ``corrupt`` array gates exactly like ``None``: the session never
+        materializes the mask into ``RoundInputs``, so the jitted round
+        keeps its corruption-free trace (no recompile, bitwise-identical
+        masters — see tests/test_adversarial.py)."""
+        return self.corrupt is not None and bool(self.corrupt.any())
+
+    @property
+    def has_hetero(self) -> bool:
+        """True when any slot runs below full speed (a speed array of all
+        ones gates like ``None``, same reasoning as ``has_corruption``)."""
+        return self.speed is not None and bool((self.speed < 1.0).any())
 
     @property
     def has_membership(self) -> bool:
@@ -143,13 +203,18 @@ class ScenarioSchedule:
 
         ``RunSpec(detector_blind=True)`` echoes this view — not the real
         schedule — into every ``RoundRecord``, so nothing downstream of the
-        session can read which slots truly failed, straggled or restarted;
-        the truth still drives the run itself. ``active`` is kept: live
-        membership is the session's *own* output (the controller decided
-        it), not an oracle input.
+        session can read which slots truly failed, straggled, restarted or
+        were corrupted; the truth still drives the run itself. ``active``
+        is kept: live membership is the session's *own* output (the
+        controller decided it), not an oracle input. ``speed`` is dropped
+        entirely (replaced by ``None``) — a zeroed speed row would be an
+        invalid schedule, and the ground-truth step rates are exactly what
+        a blind detector must infer from ``round_ms``/``u`` telemetry.
         """
         z = np.zeros_like(self.fail)
-        return dataclasses.replace(self, fail=z, straggle=z, restart=z)
+        return dataclasses.replace(
+            self, fail=z, straggle=z, restart=z,
+            corrupt=None if self.corrupt is None else z, speed=None)
 
     def failed_recent(self, r: int) -> np.ndarray:
         """(k,) bool — the worker's sync was suppressed in the *previous*
@@ -385,6 +450,276 @@ class CrashRestartScenario(FailureScenario):
         return ScenarioSchedule(down, _zeros(rounds, k), restart)
 
 
+@dataclasses.dataclass(frozen=True)
+class HeteroScenario(FailureScenario):
+    """Persistent heterogeneous worker speeds (ISSUE-9): each slot draws
+    one speed in (0, 1] at schedule time and keeps it for every round —
+    the EASGD-analysis regime break where dynamic weighting should beat
+    fixed-α hardest. No faults: a permanently slow node is a capacity
+    fact, not a failure, so the ``fail``/``straggle`` channels stay empty
+    and the score is *not* staled (unlike transient stragglers).
+
+    ``lognormal``: speed = min(1, exp(sigma·z)), z ~ N(0,1) — about half
+    the pool at full speed, the rest lognormally slower (heavier tail for
+    larger sigma). ``bimodal``: a ``slow_frac`` fraction of slots runs at
+    ``slow_scale``, the rest at full speed (two hardware generations).
+    """
+
+    dist: str = "lognormal"
+    sigma: float = 0.6
+    slow_frac: float = 0.25
+    slow_scale: float = 0.25
+    name = "hetero"
+
+    def __post_init__(self):
+        if self.dist not in ("lognormal", "bimodal"):
+            raise ValueError(f"{self.name}: dist must be 'lognormal' or "
+                             f"'bimodal', got {self.dist!r}")
+        if self.sigma <= 0:
+            raise ValueError(f"{self.name}: sigma must be > 0, "
+                             f"got {self.sigma}")
+        _check_rate(self.slow_frac, self.name)
+        if not 0.0 < self.slow_scale <= 1.0:
+            raise ValueError(f"{self.name}: slow_scale must be in (0, 1], "
+                             f"got {self.slow_scale}")
+
+    def slot_speeds(self, seed: int, k: int) -> np.ndarray:
+        """(k,) float32 persistent speeds — the single row every round
+        repeats."""
+        rng = np.random.default_rng(seed)
+        if self.dist == "lognormal":
+            s = np.minimum(1.0, np.exp(self.sigma * rng.standard_normal(k)))
+        else:
+            s = np.where(rng.random(k) < self.slow_frac,
+                         self.slow_scale, 1.0)
+        return s.astype(np.float32)
+
+    def schedule(self, seed, rounds, k):
+        speed = np.tile(self.slot_speeds(seed, k), (rounds, 1))
+        return ScenarioSchedule(_zeros(rounds, k), _zeros(rounds, k),
+                                _zeros(rounds, k), speed=speed)
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzantineScenario(FailureScenario):
+    """Persistent corrupt-gradient slots (ISSUE-9): each slot is byzantine
+    with probability ``frac`` for the whole run (compromised nodes do not
+    heal), with at least one honest slot guaranteed. Honest slots still
+    suffer iid comm failures at ``fail_rate`` — the paper's §VI noise
+    floor — drawn on honest slots only, so ``corrupt`` and ``fail`` are
+    disjoint by construction (a corrupt round that also dropped comm never
+    reaches the master and would prove nothing about the weighting)."""
+
+    frac: float = 0.25
+    fail_rate: float = 1.0 / 3.0
+    name = "byzantine"
+
+    def __post_init__(self):
+        _check_rate(self.frac, f"{self.name}.frac", lt_one=True)
+        _check_rate(self.fail_rate, f"{self.name}.fail_rate")
+
+    def corrupt_slots(self, seed: int, k: int) -> np.ndarray:
+        """(k,) bool persistent byzantine assignment (the row every round
+        repeats). Deterministic given seed; slot 0 is force-cleared in the
+        measure-zero draw where every slot came up corrupt."""
+        rng = np.random.default_rng(seed)
+        bad = rng.random(k) < self.frac
+        if bad.all():
+            bad[0] = False
+        return bad
+
+    def schedule(self, seed, rounds, k):
+        rng = np.random.default_rng(seed)
+        bad = rng.random(k) < self.frac      # same draw as corrupt_slots
+        if bad.all():
+            bad[0] = False
+        corrupt = np.tile(bad, (rounds, 1))
+        fail = (rng.random((rounds, k)) < self.fail_rate) & ~corrupt
+        return ScenarioSchedule(fail, _zeros(rounds, k), _zeros(rounds, k),
+                                corrupt=corrupt)
+
+
+# ---------------------------------------------------------------------------
+# trace replay (ISSUE-9): record / replay ScenarioSchedules as JSON lines
+# ---------------------------------------------------------------------------
+
+TRACE_KIND = "scenario-trace"
+TRACE_VERSION = 1
+
+
+def trace_membership_steps(sched: ScenarioSchedule
+                           ) -> Tuple[Tuple[int, int], ...]:
+    """The (round, k) resize steps equivalent to ``sched.active``, in the
+    exact vocabulary ``parse_membership_plan`` accepts — so
+    ``",".join(f"{r}:{k}" for r, k in steps)`` round-trips through the CLI
+    plan parser and ``PlanMembership``. Only defined when every active row
+    is a prefix mask (the lowest-n slots live, which is what every
+    membership generator and ``ElasticSession.apply`` emit); raises
+    ``ValueError`` for non-prefix masks, which a trace records as explicit
+    ``active`` slot lists instead."""
+    if sched.active is None:
+        return ()
+    counts = sched.active.sum(axis=1)
+    if not (sched.active == _active_rows(sched.rounds, sched.num_workers,
+                                         counts)).all():
+        raise ValueError(
+            "membership stream has non-prefix active rows; no "
+            "parse_membership_plan-compatible step list exists")
+    steps = [(0, int(counts[0]))]
+    for r in range(1, sched.rounds):
+        if counts[r] != counts[r - 1]:
+            steps.append((int(r), int(counts[r])))
+    return tuple(steps)
+
+
+def trace_lines(sched: ScenarioSchedule) -> List[str]:
+    """Serialize a schedule as JSON lines: one header line (kind, version,
+    rounds, capacity, optional channels present), then one event line per
+    True mask cell / value change. Replays bit-identically through
+    ``parse_trace`` — including the exact ``None``-ness of the optional
+    channels, which gates jit specialization downstream.
+
+    Membership events use the same ``(round, k)`` vocabulary as
+    ``parse_membership_plan`` (``{"ch": "k", "k": n}`` = resize to the
+    lowest n slots) whenever the active rows are prefix masks, falling
+    back to explicit ``{"ch": "active", "slots": [...]}`` rows otherwise.
+    """
+    header = {"kind": TRACE_KIND, "version": TRACE_VERSION,
+              "rounds": sched.rounds, "capacity": sched.num_workers}
+    channels = [ch for ch in ("active", "corrupt", "speed")
+                if getattr(sched, ch) is not None]
+    if channels:
+        header["channels"] = channels
+    lines = [json.dumps(header)]
+    for ch in ("fail", "straggle", "restart", "corrupt"):
+        arr = getattr(sched, ch)
+        if arr is None:
+            continue
+        for r, i in zip(*np.nonzero(arr)):
+            lines.append(json.dumps(
+                {"round": int(r), "slot": int(i), "ch": ch}))
+    if sched.speed is not None:
+        for i in range(sched.num_workers):
+            col = sched.speed[:, i]
+            for r in range(sched.rounds):
+                if r == 0 or col[r] != col[r - 1]:
+                    # float32 -> python float (f64) -> float32 is exact
+                    lines.append(json.dumps(
+                        {"round": r, "slot": i, "ch": "speed",
+                         "v": float(col[r])}))
+    if sched.active is not None:
+        try:
+            steps = trace_membership_steps(sched)
+            for r, k in steps:
+                lines.append(json.dumps({"round": r, "ch": "k", "k": k}))
+        except ValueError:
+            prev = None
+            for r in range(sched.rounds):
+                row = sched.active[r]
+                if prev is None or (row != prev).any():
+                    lines.append(json.dumps(
+                        {"round": r, "ch": "active",
+                         "slots": [int(s) for s in np.nonzero(row)[0]]}))
+                prev = row
+    return lines
+
+
+def parse_trace(lines: Sequence[str]) -> ScenarioSchedule:
+    """Inverse of ``trace_lines``: rebuild the exact ScenarioSchedule
+    (bit-identical masks, same optional-channel ``None``-ness). Events are
+    applied in round order; ``speed``/``k``/``active`` events fill forward
+    from their round until the next event for that slot/stream."""
+    body = [ln for ln in lines if ln.strip()]
+    if not body:
+        raise ValueError("empty trace")
+    header = json.loads(body[0])
+    if header.get("kind") != TRACE_KIND:
+        raise ValueError(f"not a scenario trace: kind={header.get('kind')!r}")
+    if header.get("version") != TRACE_VERSION:
+        raise ValueError(f"unsupported trace version {header.get('version')!r}"
+                         f" (this reader is v{TRACE_VERSION})")
+    rounds, k = int(header["rounds"]), int(header["capacity"])
+    channels = set(header.get("channels", ()))
+    unknown = channels - {"active", "corrupt", "speed"}
+    if unknown:
+        raise ValueError(f"unknown trace channels {sorted(unknown)}")
+    masks = {ch: _zeros(rounds, k) for ch in ("fail", "straggle", "restart")}
+    corrupt = _zeros(rounds, k) if "corrupt" in channels else None
+    speed = np.ones((rounds, k), np.float32) if "speed" in channels else None
+    active = np.ones((rounds, k), bool) if "active" in channels else None
+    events = [json.loads(ln) for ln in body[1:]]
+    events.sort(key=lambda e: e["round"])  # stable: file order within a round
+    for ev in events:
+        r, ch = int(ev["round"]), ev["ch"]
+        if not 0 <= r < rounds:
+            raise ValueError(f"trace event round {r} outside 0..{rounds-1}")
+        if ch in masks or ch == "corrupt":
+            i = int(ev["slot"])
+            if not 0 <= i < k:
+                raise ValueError(f"trace event slot {i} outside 0..{k-1}")
+            if ch == "corrupt":
+                if corrupt is None:
+                    raise ValueError(
+                        "corrupt event but 'corrupt' not in header channels")
+                corrupt[r, i] = True
+            else:
+                masks[ch][r, i] = True
+        elif ch == "speed":
+            if speed is None:
+                raise ValueError(
+                    "speed event but 'speed' not in header channels")
+            speed[r:, int(ev["slot"])] = np.float32(ev["v"])
+        elif ch == "k":
+            if active is None:
+                raise ValueError(
+                    "membership event but 'active' not in header channels")
+            active[r:] = np.arange(k) < int(ev["k"])
+        elif ch == "active":
+            if active is None:
+                raise ValueError(
+                    "membership event but 'active' not in header channels")
+            row = np.zeros(k, bool)
+            row[[int(s) for s in ev["slots"]]] = True
+            active[r:] = row
+        else:
+            raise ValueError(f"unknown trace event channel {ch!r}")
+    return ScenarioSchedule(masks["fail"], masks["straggle"],
+                            masks["restart"], active=active,
+                            corrupt=corrupt, speed=speed)
+
+
+def write_trace(path, sched: ScenarioSchedule) -> None:
+    Path(path).write_text("\n".join(trace_lines(sched)) + "\n")
+
+
+def read_trace(path) -> ScenarioSchedule:
+    return parse_trace(Path(path).read_text().splitlines())
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceScenario(FailureScenario):
+    """Replay a recorded trace (``launch/train.py --dump-trace`` writes
+    one from any live run, controller-driven membership edits included).
+    The trace carries its own rounds/capacity, so ``schedule`` validates
+    the requested shape against it and ignores the seed — replay is
+    deterministic by construction. Deliberately not in
+    ``FAILURE_SCENARIOS`` (it has no generator knobs); sessions attach it
+    via ``RunSpec.schedule`` (CLI: ``--trace``)."""
+
+    path: str = ""
+    name = "trace"
+
+    def schedule(self, seed, rounds, k):
+        sched = read_trace(self.path)
+        if rounds != sched.rounds or k != sched.num_workers:
+            raise ValueError(
+                f"trace {self.path!r} was recorded for "
+                f"(rounds={sched.rounds}, capacity={sched.num_workers}); "
+                f"requested (rounds={rounds}, capacity={k}) — replay runs "
+                f"must match the recorded shape")
+        return sched
+
+
 # ---------------------------------------------------------------------------
 # membership scenarios (ISSUE-5): planned worker-pool resize streams
 # ---------------------------------------------------------------------------
@@ -572,6 +907,11 @@ def make_scenario(ecfg: ElasticConfig) -> FailureScenario:
         return StragglerScenario(p, ecfg.burst_recover_prob)
     if name == "crash_restart":
         return CrashRestartScenario(p, ecfg.crash_downtime)
+    if name == "hetero":
+        return HeteroScenario(ecfg.hetero_dist, ecfg.hetero_sigma,
+                              ecfg.hetero_slow_frac, ecfg.hetero_slow_scale)
+    if name == "byzantine":
+        return ByzantineScenario(ecfg.byzantine_frac, p)
     raise ValueError(f"unknown failure scenario {name!r}; "
                      f"known: {FAILURE_SCENARIOS}")
 

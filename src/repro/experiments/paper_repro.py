@@ -68,14 +68,21 @@ def run_one(
     score_k: float = -0.05,
     failure_scenario: str = "iid",
     rounds_per_call: int = 1,
+    score_clip: float = 0.0,
+    byzantine_frac: float = 0.25,
+    byzantine_mode: str = "sign_flip",
 ):
     opt_name, dynamic, oracle, use_overlap = METHODS[method]
     r = (overlap_ratio if overlap_ratio is not None
          else (paper_overlap_ratio(k) if use_overlap else 0.0))
+    # score_clip only bites in dynamic mode (weights_for); fixed-α/oracle
+    # arms keep the paper's maps even when the sweep passes it for all arms
     ecfg = ElasticConfig(
         num_workers=k, tau=tau, alpha=ALPHA, overlap_ratio=r,
         failure_prob=failure_prob, dynamic=dynamic, oracle=oracle,
-        score_k=score_k, failure_scenario=failure_scenario)
+        score_k=score_k, failure_scenario=failure_scenario,
+        score_clip=score_clip, byzantine_frac=byzantine_frac,
+        byzantine_mode=byzantine_mode)
     ocfg = OptimizerConfig(name=opt_name, lr=LR, momentum=0.5,
                            betas=(0.9, 0.999), hutchinson_samples=1)
     # data_seed=0: same dataset ∀ (method, seed) runs, as §VI compares;

@@ -28,6 +28,18 @@ evicted and probed back in at chunk boundaries, from observable telemetry
 only. ``--detector-blind`` additionally zeroes the ground-truth event masks
 echoed into the printed records, so what you see is exactly what the
 controller saw.
+
+Trace replay (ISSUE-9): ``--dump-trace run.jsonl`` records the exact
+fail/straggle/restart/corrupt/speed/membership stream the run executed
+(including controller-applied resizes) as a JSON-lines scenario trace;
+``--trace run.jsonl`` replays a recorded trace instead of drawing a fresh
+schedule — rounds/capacity are coerced to the recorded shape, so the replay
+is bit-identical given the same seed and model flags. Adversarial knobs:
+``--failure-scenario byzantine`` plus ``--byzantine-*`` injects gradient
+corruption into a persistent subset of slots, and ``--score-clip`` arms the
+robustness clamp that lets the master refuse their pulls
+(``repro.core.dynamic_weight``); ``--failure-scenario hetero`` plus
+``--hetero-*`` gives each slot a persistent step-rate drawn once per run.
 """
 from __future__ import annotations
 
@@ -39,7 +51,8 @@ import numpy as np
 from repro.api import ElasticSession, RunSpec
 from repro.configs.base import (FAILURE_SCENARIOS, MEMBERSHIP_SCENARIOS,
                                 ElasticConfig, OptimizerConfig)
-from repro.core.scenarios import parse_membership_plan
+from repro.core.scenarios import (parse_membership_plan, read_trace,
+                                  write_trace)
 
 
 def main(argv=None):
@@ -83,6 +96,38 @@ def main(argv=None):
                     choices=FAILURE_SCENARIOS,
                     help="failure regime injected into the run "
                          "(see repro/core/scenarios.py)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="replay a recorded scenario trace (JSON-lines, "
+                         "see repro.core.scenarios.read_trace) instead of "
+                         "drawing a schedule; --rounds/--workers/--capacity "
+                         "are coerced to the recorded shape")
+    ap.add_argument("--dump-trace", default=None, metavar="PATH",
+                    help="after the run, write the executed schedule "
+                         "(including controller-applied membership) as a "
+                         "replayable JSON-lines trace")
+    ap.add_argument("--score-clip", type=float, default=0.0,
+                    help="robustness clamp: raw scores above this give the "
+                         "worker zero master weight and re-anchor it if it "
+                         "diverged past float32 range; 0 = paper behaviour "
+                         "(repro.core.dynamic_weight)")
+    ap.add_argument("--byzantine-frac", type=float, default=0.25,
+                    help="fraction of slots drawn corrupt under "
+                         "--failure-scenario byzantine")
+    ap.add_argument("--byzantine-mode", default="sign_flip",
+                    choices=("sign_flip", "scale", "noise"),
+                    help="gradient corruption applied to corrupt slots")
+    ap.add_argument("--byzantine-scale", type=float, default=5.0,
+                    help="magnitude for the scale/noise corruption modes")
+    ap.add_argument("--hetero-dist", default="lognormal",
+                    choices=("lognormal", "bimodal"),
+                    help="per-slot persistent speed distribution under "
+                         "--failure-scenario hetero")
+    ap.add_argument("--hetero-sigma", type=float, default=0.6,
+                    help="lognormal sigma for --hetero-dist lognormal")
+    ap.add_argument("--hetero-slow-frac", type=float, default=0.25,
+                    help="fraction of slow slots for --hetero-dist bimodal")
+    ap.add_argument("--hetero-slow-scale", type=float, default=0.25,
+                    help="step-rate of slow slots for --hetero-dist bimodal")
     ap.add_argument("--no-dynamic", action="store_true")
     ap.add_argument("--comm-mode", default="sequential",
                     choices=("sequential", "fused"),
@@ -130,6 +175,17 @@ def main(argv=None):
         membership = "plan"
         plan = parse_membership_plan(args.membership_plan)
     capacity = args.capacity
+    schedule = None
+    if args.trace:
+        schedule = read_trace(args.trace)
+        rounds, cap = schedule.fail.shape
+        if (args.rounds, capacity or args.workers) != (rounds, cap):
+            print(f"[train] trace {args.trace}: coercing rounds/capacity "
+                  f"to the recorded ({rounds}, {cap})")
+        args.rounds, capacity = rounds, cap
+        args.workers = (int(schedule.active[0].sum())
+                        if schedule.active is not None else cap)
+        membership, plan = "static", ()  # the trace carries membership
     if membership != "static" and not capacity:
         # resize needs headroom: default the slot pool to the largest
         # worker count the scheduled stream ever reaches; a scale_up with
@@ -160,9 +216,17 @@ def main(argv=None):
         dynamic=not args.no_dynamic, comm_mode=args.comm_mode,
         staleness=args.staleness, placement=args.placement,
         failure_scenario=args.failure_scenario,
+        score_clip=args.score_clip,
+        byzantine_frac=args.byzantine_frac,
+        byzantine_mode=args.byzantine_mode,
+        byzantine_scale=args.byzantine_scale,
+        hetero_dist=args.hetero_dist, hetero_sigma=args.hetero_sigma,
+        hetero_slow_frac=args.hetero_slow_frac,
+        hetero_slow_scale=args.hetero_slow_scale,
         membership_scenario=membership, membership_k=args.membership_k,
         membership_round=args.membership_round, membership_plan=plan)
     spec = RunSpec(
+        schedule=schedule,
         arch=args.arch, smoke=args.smoke,
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr),
         elastic=ecfg, rounds=args.rounds,
@@ -176,6 +240,10 @@ def main(argv=None):
     sess = ElasticSession(spec)
 
     t0 = time.time()
+    if not spec.plain and sess.schedule.has_hetero:
+        print(f"[train] persistent slot speeds: "
+              f"{np.asarray(sess.schedule.speed[0]).round(3).tolist()}",
+              flush=True)
     for rec in sess.run_iter():
         if spec.plain:
             print(f"step {rec.round}: loss={rec.loss:.4f}", flush=True)
@@ -187,6 +255,8 @@ def main(argv=None):
             extra += f" straggle={rec.straggle.astype(int).tolist()}"
         if sess.schedule.has_restarts:
             extra += f" restart={rec.restart.astype(int).tolist()}"
+        if sess.schedule.has_corruption:
+            extra += f" corrupt={rec.corrupt.astype(int).tolist()}"
         print(f"round {rec.round}: loss={rec.loss:.4f} "
               f"fails={rec.fail.astype(int).tolist()} "
               f"score={np.asarray(rec.score).round(3).tolist()} "
@@ -198,6 +268,9 @@ def main(argv=None):
         for a in applied:
             print(f"[control]   round {a.round}: {a.action.describe()} "
                   f"-> {a.live_after} live")
+    if args.dump_trace and sess.schedule is not None:
+        write_trace(args.dump_trace, sess.schedule)
+        print(f"[train] wrote scenario trace to {args.dump_trace}")
     if args.save:
         print(f"saved master params to {args.save}")
 

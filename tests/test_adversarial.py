@@ -1,0 +1,449 @@
+"""Adversarial & heterogeneous scenario engine (ISSUE-9): trace replay,
+persistent-speed workers, byzantine slots, and the score_clip robustness
+clamp.
+
+Committed calibration facts this file asserts (paper-cnn smoke, sgd
+lr=0.01, k=4, τ=2, byzantine_frac=0.5, score_clip=0.5, 12 rounds,
+both comm backends, seeds 1–3):
+
+- mean h2 of corrupt slots over rounds 4+ is exactly 0.0 (refused);
+  honest slots get 0.013–0.028 — the dynamic maps + clamp down-weight
+  poisoned workers to nothing while the pool keeps exchanging.
+- master params stay finite even though sign-flip corruption drives the
+  corrupt workers past float32 range every round: the quarantine re-seats
+  any worker whose log-distance goes non-finite and pushes u = log(1e-30)
+  so the telemetry (and the next-round score) stays finite.
+- without the clamp, a NaN score falls through both h2 comparisons to the
+  α branch and the master NaN-poisons within ~4 rounds — that measurement
+  is the reason ``ElasticConfig.score_clip`` exists
+  (tests/test_scenarios.py::test_byzantine_wrecks_easgd_but_not_clipped_deahes).
+
+Property-based tests ride the optional-hypothesis shim like
+tests/test_scenarios.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _property_shim import given, settings, st
+
+from repro.api import ElasticSession, RunSpec
+from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+from repro.core import dynamic_weight as dw
+from repro.core import scenarios as sc
+from repro.core.coordinator import ElasticTrainer
+from repro.models.registry import build_model
+
+
+def _trainer(k=2, tau=1, opt="sgd", **kw):
+    model = build_model(get_config("paper_cnn"))
+    defaults = dict(num_workers=k, tau=tau, alpha=0.1, dynamic=False)
+    defaults.update(kw)
+    return ElasticTrainer(model, OptimizerConfig(name=opt, lr=0.01),
+                          ElasticConfig(**defaults))
+
+
+def _img_batches(tau, k, n=4, seed=0):
+    return {"images": jax.random.normal(jax.random.key(seed),
+                                        (tau, k, n, 28, 28, 1)),
+            "labels": jnp.zeros((tau, k, n), jnp.int32)}
+
+
+def _byz_spec(seed, mode="sequential", rounds=12, **ekw):
+    ekw.setdefault("failure_scenario", "byzantine")
+    return RunSpec(
+        arch="paper-cnn", smoke=True, rounds=rounds, seed=seed,
+        batch_size=4, n_data=96, n_test=32,
+        optimizer=OptimizerConfig(name="sgd", lr=0.01),
+        elastic=ElasticConfig(num_workers=4, tau=2, comm_mode=mode, **ekw))
+
+
+# ---------------------------------------------------------------------------
+# generators: persistence, disjointness, distributions
+# ---------------------------------------------------------------------------
+
+def test_hetero_speeds_are_persistent_and_bounded():
+    sched = sc.HeteroScenario().schedule(3, rounds=40, k=6)
+    assert sched.speed.shape == (40, 6)
+    assert sched.speed.dtype == np.float32
+    np.testing.assert_array_equal(sched.speed,
+                                  np.tile(sched.speed[0], (40, 1)))
+    assert (sched.speed > 0).all() and (sched.speed <= 1).all()
+    assert not sched.fail.any() and not sched.straggle.any()
+
+
+def test_hetero_bimodal_draws_the_two_levels():
+    s = sc.HeteroScenario(dist="bimodal", slow_frac=0.5,
+                          slow_scale=0.25).slot_speeds(0, 64)
+    assert set(np.unique(s)) <= {np.float32(0.25), np.float32(1.0)}
+    assert (s == 0.25).any() and (s == 1.0).any()
+
+
+def test_byzantine_corrupt_is_persistent_and_disjoint_from_fail():
+    sched = sc.ByzantineScenario(0.5, 1.0 / 3.0).schedule(1, rounds=60, k=4)
+    assert sched.corrupt.any(), "seed 1 draws corrupt slots at frac=0.5"
+    np.testing.assert_array_equal(sched.corrupt,
+                                  np.tile(sched.corrupt[0], (60, 1)))
+    assert not (sched.corrupt & sched.fail).any()
+    # honest slots still see the iid fail floor
+    assert sched.fail[:, ~sched.corrupt[0]].any()
+
+
+def test_byzantine_always_leaves_an_honest_slot():
+    for seed in range(40):
+        bad = sc.ByzantineScenario(0.97).corrupt_slots(seed, 3)
+        assert not bad.all()
+    # corrupt_slots is the same draw the schedule tiles
+    sched = sc.ByzantineScenario(0.5).schedule(9, rounds=5, k=4)
+    np.testing.assert_array_equal(
+        sched.corrupt[0], sc.ByzantineScenario(0.5).corrupt_slots(9, 4))
+
+
+def test_blind_zeroes_corrupt_and_drops_speed():
+    sched = sc.ByzantineScenario(0.5).schedule(1, rounds=8, k=4)
+    sched = dataclasses.replace(
+        sched, speed=np.full((8, 4), 0.5, np.float32))
+    b = sched.blind()
+    assert not b.corrupt.any() and b.speed is None
+    assert not b.has_corruption and not b.has_hetero
+
+
+# ---------------------------------------------------------------------------
+# property-based (hypothesis shim: these skip without hypothesis)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=0, max_value=2**31), st.floats(0.1, 0.9),
+       st.floats(0.1, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_prop_hetero_bimodal_stationary_slow_fraction(seed, frac, scale):
+    s = sc.HeteroScenario(dist="bimodal", slow_frac=frac,
+                          slow_scale=scale).slot_speeds(seed, 600)
+    assert abs(float(np.mean(s < 1.0)) - frac * (scale < 1.0)) < 0.07
+
+
+@given(st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=20, deadline=None)
+def test_prop_hetero_lognormal_half_the_pool_at_full_speed(seed):
+    # min(1, exp(σz)) pins exactly the z ≥ 0 half at 1.0
+    s = sc.HeteroScenario(sigma=0.6).slot_speeds(seed, 600)
+    assert abs(float(np.mean(s == 1.0)) - 0.5) < 0.07
+    assert (s > 0).all() and (s <= 1).all()
+
+
+@given(st.integers(min_value=0, max_value=2**31), st.floats(0.05, 0.9))
+@settings(max_examples=20, deadline=None)
+def test_prop_byzantine_corrupt_fail_disjoint(seed, frac):
+    sched = sc.ByzantineScenario(frac, 0.5).schedule(seed, rounds=50, k=6)
+    assert not (sched.corrupt & sched.fail).any()
+    assert not sched.corrupt.all(axis=1).any()
+    a = sc.ByzantineScenario(frac, 0.5).schedule(seed, rounds=50, k=6)
+    np.testing.assert_array_equal(a.corrupt, sched.corrupt)  # deterministic
+    np.testing.assert_array_equal(a.fail, sched.fail)
+
+
+def _random_schedule(rng, rounds, k, with_corrupt, with_speed, with_active):
+    fail = rng.random((rounds, k)) < 0.3
+    sched = sc.ScenarioSchedule(fail,
+                                rng.random((rounds, k)) < 0.2,
+                                rng.random((rounds, k)) < 0.1)
+    if with_corrupt:
+        corrupt = (rng.random((rounds, k)) < 0.3) & ~fail
+        sched = dataclasses.replace(sched, corrupt=corrupt)
+    if with_speed:
+        # mix persistent rows with per-round changes: both the hold and the
+        # change-event paths of the writer get exercised
+        speed = rng.uniform(0.05, 1.0, (rounds, k)).astype(np.float32)
+        hold = rng.random((rounds, k)) < 0.7
+        for r in range(1, rounds):
+            speed[r] = np.where(hold[r], speed[r - 1], speed[r])
+        sched = dataclasses.replace(sched, speed=speed)
+    if with_active:
+        counts = rng.integers(1, k + 1, rounds)
+        active = np.arange(k)[None, :] < counts[:, None]
+        sched = sched.with_membership(active)
+    return sched
+
+
+@given(st.integers(min_value=0, max_value=2**31),
+       st.booleans(), st.booleans(), st.booleans())
+@settings(max_examples=25, deadline=None)
+def test_prop_trace_roundtrip_identity(seed, with_corrupt, with_speed,
+                                       with_active):
+    """write → parse reproduces every channel bit-exactly, including which
+    optional channels exist at all (None-ness is part of the contract —
+    the jit cache specializes on it)."""
+    rng = np.random.default_rng(seed)
+    sched = _random_schedule(rng, int(rng.integers(1, 25)),
+                             int(rng.integers(1, 7)),
+                             with_corrupt, with_speed, with_active)
+    back = sc.parse_trace(sc.trace_lines(sched))
+    for ch in ("fail", "straggle", "restart", "corrupt", "speed", "active"):
+        a, b = getattr(sched, ch), getattr(back, ch)
+        assert (a is None) == (b is None), ch
+        if a is not None:
+            np.testing.assert_array_equal(a, b, err_msg=ch)
+            assert a.dtype == b.dtype, ch
+
+
+# ---------------------------------------------------------------------------
+# trace IO: files, validation, membership-plan compatibility
+# ---------------------------------------------------------------------------
+
+def test_write_read_trace_file_roundtrip(tmp_path):
+    sched = sc.ByzantineScenario(0.5).schedule(1, rounds=10, k=4)
+    sched = dataclasses.replace(
+        sched, speed=np.tile(np.asarray([1.0, 0.5, 1.0, 0.25], np.float32),
+                             (10, 1)))
+    p = tmp_path / "run.jsonl"
+    sc.write_trace(p, sched)
+    back = sc.read_trace(p)
+    np.testing.assert_array_equal(back.fail, sched.fail)
+    np.testing.assert_array_equal(back.corrupt, sched.corrupt)
+    np.testing.assert_array_equal(back.speed, sched.speed)
+    assert back.active is None
+
+
+def test_trace_scenario_replays_and_validates_shape(tmp_path):
+    sched = sc.IIDScenario(0.3).schedule(5, rounds=8, k=3)
+    p = tmp_path / "t.jsonl"
+    sc.write_trace(p, sched)
+    scen = sc.TraceScenario(p)
+    assert scen.name == "trace"
+    got = scen.schedule(seed=123, rounds=8, k=3)  # seed is ignored
+    np.testing.assert_array_equal(got.fail, sched.fail)
+    with pytest.raises(ValueError):
+        scen.schedule(seed=0, rounds=9, k=3)
+    with pytest.raises(ValueError):
+        scen.schedule(seed=0, rounds=8, k=4)
+
+
+def test_trace_membership_steps_speak_the_plan_vocabulary():
+    rows = np.ones((9, 4), bool)
+    rows[3:7, 3] = False
+    rows[5:7, 2] = False
+    sched = sc.IIDScenario(0.2).schedule(0, rounds=9, k=4)
+    sched = sched.with_membership(rows)
+    steps = sc.trace_membership_steps(sched)
+    assert steps == ((0, 4), (3, 3), (5, 2), (7, 4))
+    plan = ",".join(f"{r}:{k}" for r, k in steps)
+    assert sc.parse_membership_plan(plan) == steps[1:] or \
+        sc.parse_membership_plan(plan) == steps
+    # and the full trace round-trips the membership exactly
+    back = sc.parse_trace(sc.trace_lines(sched))
+    np.testing.assert_array_equal(back.active, rows)
+
+
+def test_trace_non_prefix_membership_survives_via_active_lists():
+    rows = np.ones((4, 3), bool)
+    rows[2, 0] = False  # slot 0 down, slots 1-2 live: not a prefix mask
+    sched = sc.IIDScenario(0.2).schedule(0, rounds=4, k=3)
+    sched = sched.with_membership(rows)
+    with pytest.raises(ValueError):
+        sc.trace_membership_steps(sched)
+    back = sc.parse_trace(sc.trace_lines(sched))
+    np.testing.assert_array_equal(back.active, rows)
+
+
+def test_parse_trace_rejects_malformed():
+    good = sc.trace_lines(sc.IIDScenario(0.3).schedule(0, rounds=4, k=2))
+    with pytest.raises(ValueError):
+        sc.parse_trace([])
+    with pytest.raises(ValueError):
+        sc.parse_trace(['{"kind": "other", "version": 1}'])
+    with pytest.raises(ValueError):
+        sc.parse_trace([good[0].replace('"version": 1', '"version": 99')])
+    with pytest.raises(ValueError):
+        sc.parse_trace(list(good) +
+                       ['{"round": 99, "slot": 0, "ch": "fail"}'])
+    with pytest.raises(ValueError):
+        sc.parse_trace(list(good) +
+                       ['{"round": 0, "slot": 7, "ch": "fail"}'])
+    with pytest.raises(ValueError):
+        sc.parse_trace(list(good) +
+                       ['{"round": 0, "slot": 0, "ch": "gamma_rays"}'])
+
+
+# ---------------------------------------------------------------------------
+# corruption unit tests: the _poison modes, inside the local phase
+# ---------------------------------------------------------------------------
+
+def _phase_delta(tr, state, b, corrupt):
+    out, _, _ = tr.local_phase(state, b, jax.random.key(1), corrupt=corrupt)
+    return [np.asarray(w) - np.asarray(s)
+            for w, s in zip(jax.tree.leaves(out["workers"]),
+                            jax.tree.leaves(state["workers"]))]
+
+
+def test_sign_flip_negates_the_sgd_step():
+    """One sign-flipped SGD step walks exactly opposite the clean step —
+    and the honest slot in the same batched phase is untouched bit-for-bit."""
+    tr = _trainer(k=2, byzantine_mode="sign_flip")
+    state = tr.init_state(jax.random.key(0))
+    b = _img_batches(1, 2)
+    clean = _phase_delta(tr, state, b, None)
+    bad = _phase_delta(tr, state, b, jnp.asarray([True, False]))
+    for c, d in zip(clean, bad):
+        np.testing.assert_allclose(d[0], -c[0], rtol=1e-5, atol=1e-7)
+        np.testing.assert_array_equal(d[1], c[1])
+
+
+def test_scale_mode_multiplies_the_sgd_step():
+    tr = _trainer(k=2, byzantine_mode="scale", byzantine_scale=5.0)
+    state = tr.init_state(jax.random.key(0))
+    b = _img_batches(1, 2)
+    clean = _phase_delta(tr, state, b, None)
+    bad = _phase_delta(tr, state, b, jnp.asarray([True, False]))
+    for c, d in zip(clean, bad):
+        np.testing.assert_allclose(d[0], 5.0 * c[0], rtol=1e-4, atol=1e-6)
+        np.testing.assert_array_equal(d[1], c[1])
+
+
+def test_noise_mode_is_seed_deterministic_and_perturbs():
+    tr = _trainer(k=2, byzantine_mode="noise", byzantine_scale=5.0)
+    state = tr.init_state(jax.random.key(0))
+    b = _img_batches(1, 2)
+    a = _phase_delta(tr, state, b, jnp.asarray([True, False]))
+    c = _phase_delta(tr, state, b, jnp.asarray([True, False]))
+    clean = _phase_delta(tr, state, b, None)
+    for x, y, z in zip(a, c, clean):
+        np.testing.assert_array_equal(x[0], y[0])   # same rng → same noise
+        assert np.abs(x[0] - z[0]).max() > 0        # and it really perturbs
+        np.testing.assert_array_equal(x[1], z[1])
+
+
+# ---------------------------------------------------------------------------
+# hetero speeds thread through local_phase as per-slot effective τ
+# ---------------------------------------------------------------------------
+
+def test_speed_truncates_local_steps_like_a_shorter_stream():
+    """speed=0.5 at τ=4 runs exactly round(0.5·4)=2 local steps: the slow
+    slot's end-of-phase params match a clean run over the truncated batch
+    stream, the full-speed slot matches the untruncated run bit-for-bit."""
+    tr = _trainer(k=2, tau=4)
+    state = tr.init_state(jax.random.key(0))
+    b = _img_batches(4, 2)
+    full, _, _ = tr.local_phase(state, b, jax.random.key(1))
+    slow, _, _ = tr.local_phase(state, b, jax.random.key(1),
+                                speed=jnp.asarray([0.5, 1.0], jnp.float32))
+    trunc = {key: v[:2] for key, v in b.items()}
+    want, _, _ = tr.local_phase(state, trunc, jax.random.key(1))
+    for got, w, f in zip(jax.tree.leaves(slow["workers"]),
+                         jax.tree.leaves(want["workers"]),
+                         jax.tree.leaves(full["workers"])):
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(w[0]),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(f[1]))
+
+
+def test_speed_floor_is_one_step():
+    # even a near-zero speed runs one local step — a live slot never idles
+    tr = _trainer(k=2, tau=3)
+    state = tr.init_state(jax.random.key(0))
+    b = _img_batches(3, 2)
+    out, _, _ = tr.local_phase(state, b, jax.random.key(1),
+                               speed=jnp.asarray([0.01, 1.0], jnp.float32))
+    one = {key: v[:1] for key, v in b.items()}
+    want, _, _ = tr.local_phase(state, one, jax.random.key(1))
+    got0 = jax.tree.leaves(out["workers"])[0][0]
+    want0 = jax.tree.leaves(want["workers"])[0][0]
+    np.testing.assert_allclose(np.asarray(got0), np.asarray(want0),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# score_clip clamp + quarantine (the robustness mechanism itself)
+# ---------------------------------------------------------------------------
+
+def test_weights_for_clip_zeroes_runaway_and_nonfinite_scores():
+    cfg = ElasticConfig(alpha=0.5, score_clip=0.5)
+    a = jnp.asarray([-0.2, 0.3, 0.8, jnp.inf, jnp.nan], jnp.float32)
+    w1, w2 = dw.weights_for(cfg, a)
+    got = np.asarray(w2)
+    assert got[1] == pytest.approx(0.5)   # below clip: paper's α branch
+    assert got[2] == 0.0 and got[3] == 0.0 and got[4] == 0.0
+    # h1 untouched: the worker may still pull itself back
+    np.testing.assert_allclose(np.asarray(w1),
+                               np.asarray(dw.h1(a, 0.5, cfg.score_k)))
+    # clip=0 keeps the paper maps bit-identically — including the NaN→α
+    # fall-through that motivated the clamp
+    _, w2_paper = dw.weights_for(ElasticConfig(alpha=0.5), a)
+    assert np.asarray(w2_paper)[4] == pytest.approx(0.5)
+
+
+@pytest.mark.parametrize("mode", ["sequential", "fused"])
+def test_byzantine_down_weighting_and_finite_master(mode):
+    """The committed ISSUE-9 numbers, seed 1 (seeds 2–3 in the slow sweep):
+    corrupt slots' mean master-schedule weight over rounds 4+ is exactly 0,
+    honest slots keep exchanging, and the master never goes non-finite even
+    though the corrupt workers blow past float32 range every round."""
+    sess = ElasticSession(_byz_spec(1, mode, byzantine_frac=0.5,
+                                    score_clip=0.5))
+    recs = sess.run()
+    corrupt = sess.schedule.corrupt[0]
+    assert list(np.where(corrupt)[0]) == [0, 2]
+    h2 = np.stack([r.h2 for r in recs])[4:]
+    assert float(h2[:, corrupt].mean()) == 0.0
+    assert float(h2[:, ~corrupt].mean()) > 0.01   # measured 0.0204
+    for leaf in jax.tree.leaves(sess.state["master"]):
+        assert bool(np.isfinite(np.asarray(leaf)).all())
+    u = np.stack([r.u for r in recs])
+    assert np.isfinite(u).all(), "quarantine must keep telemetry finite"
+    # the records echo the ground-truth corrupt row
+    for r in recs:
+        np.testing.assert_array_equal(r.corrupt, corrupt)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["sequential", "fused"])
+def test_byzantine_down_weighting_across_seeds(mode):
+    for seed, slots in ((2, [1]), (3, [1, 3])):
+        sess = ElasticSession(_byz_spec(seed, mode, byzantine_frac=0.5,
+                                        score_clip=0.5))
+        recs = sess.run()
+        corrupt = sess.schedule.corrupt[0]
+        assert list(np.where(corrupt)[0]) == slots
+        h2 = np.stack([r.h2 for r in recs])[4:]
+        assert float(h2[:, corrupt].mean()) < float(h2[:, ~corrupt].mean())
+        assert float(h2[:, corrupt].mean()) == 0.0
+        u = np.stack([r.u for r in recs])
+        assert np.isfinite(u).all()
+
+
+# ---------------------------------------------------------------------------
+# None-specialization: inactive channels must not perturb or recompile
+# ---------------------------------------------------------------------------
+
+def test_inactive_channels_keep_trace_and_bits(tmp_path):
+    """An all-False corrupt channel + all-ones speed channel is gated to
+    None before RoundInputs, so a pre-existing run is bit-exact and the jit
+    cache sees the same single trace shape (satellite 4: the bugfix-class
+    guarantee that merely *carrying* the channels costs nothing)."""
+    base = sc.IIDScenario(0.3).schedule(8, rounds=5, k=3)
+    decorated = dataclasses.replace(
+        base, corrupt=np.zeros((5, 3), bool),
+        speed=np.ones((5, 3), np.float32))
+    assert not decorated.has_corruption and not decorated.has_hetero
+
+    def run(sched):
+        spec = RunSpec(arch="paper-cnn", smoke=True, rounds=5, seed=0,
+                       batch_size=4, n_data=48, n_test=24,
+                       optimizer=OptimizerConfig(name="sgd", lr=0.01),
+                       elastic=ElasticConfig(num_workers=3, tau=2),
+                       schedule=sched)
+        sess = ElasticSession(spec)
+        before = sess.trainer.round_step._cache_size()
+        recs = sess.run()
+        grew = sess.trainer.round_step._cache_size() - before
+        return sess, recs, grew
+
+    sess_a, recs_a, grew_a = run(base)
+    sess_b, recs_b, grew_b = run(decorated)
+    assert grew_a == grew_b == 1, "decorated schedule must not retrace"
+    for la, lb in zip(jax.tree.leaves(sess_a.state["master"]),
+                      jax.tree.leaves(sess_b.state["master"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for ra, rb in zip(recs_a, recs_b):
+        np.testing.assert_array_equal(ra.u, rb.u)
+        np.testing.assert_array_equal(ra.corrupt, rb.corrupt)  # both zeros

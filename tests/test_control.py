@@ -290,7 +290,7 @@ class TestNoOracleLeakage:
         """Static scan: no module under repro/control/ reads the schedule's
         ground-truth fields or the oracle feed."""
         forbidden = re.compile(
-            r"\.(fail|straggle|restart|failed_recent)\b")
+            r"\.(fail|straggle|restart|corrupt|failed_recent)\b")
         for src in sorted(CONTROL_DIR.glob("*.py")):
             for n, line in enumerate(src.read_text().splitlines(), 1):
                 code = line.split("#", 1)[0]
@@ -321,6 +321,10 @@ class TestNoOracleLeakage:
             @property
             def restart(self):
                 raise AssertionError("detector read ground truth: restart")
+
+            @property
+            def corrupt(self):
+                raise AssertionError("detector read ground truth: corrupt")
 
         det = FailureDetector(4)
         u = healthy_then_adrift(10, 4, slot=2, onset=4)
@@ -430,6 +434,7 @@ class TestSessionControlAPI:
             assert not rec.fail.any()
             assert not rec.straggle.any()
             assert not rec.restart.any()
+            assert not rec.corrupt.any()
         # blinding the echo must not perturb the run itself
         np.testing.assert_array_equal(
             np.asarray(open_recs[-1].u), np.asarray(blind_recs[-1].u))
@@ -459,22 +464,26 @@ def _control_bench():
 _ACCEPT_CACHE = {}
 
 
-def accept_run(scenario, seed, arm):
-    """One cached acceptance-regime run; arm in {open, oracle, closed}."""
+def accept_run(scenario, seed, arm, **spec_kw):
+    """One cached acceptance-regime run; arm in {open, oracle, closed}.
+
+    ``spec_kw`` forwards extra ElasticConfig knobs through
+    ``control_spec`` (the adversarial sweep's byzantine/score_clip setup).
+    """
     cb = _control_bench()
-    key = (scenario, seed, arm)
+    key = (scenario, seed, arm, tuple(sorted(spec_kw.items())))
     if key in _ACCEPT_CACHE:
         return _ACCEPT_CACHE[key]
     if arm == "closed":
         sess = ElasticSession(cb.control_spec(
-            scenario, seed, controller="rules", blind=True))
+            scenario, seed, controller="rules", blind=True, **spec_kw))
         records = sess.run()
     elif arm == "oracle":
-        sess = ElasticSession(cb.control_spec(scenario, seed))
+        sess = ElasticSession(cb.control_spec(scenario, seed, **spec_kw))
         sess.add_observer(cb.OracleController(sess.schedule))
         records = sess.run()
     else:
-        sess = ElasticSession(cb.control_spec(scenario, seed))
+        sess = ElasticSession(cb.control_spec(scenario, seed, **spec_kw))
         records = sess.run()
     _ACCEPT_CACHE[key] = (sess, records)
     return sess, records
@@ -605,3 +614,47 @@ class TestDetectorSweep:
         if min_recall is not None and long_total:
             assert long_hit / long_total >= min_recall, (
                 scenario, long_hit, long_total)
+
+    # adversarial/heterogeneous extension (ISSUE-9). Byzantine runs use
+    # noise-mode corruption + score_clip: the clamp converts "polluting
+    # the master" into the cut-drift signature adrift is built for (see
+    # repro/control/detector.py docstring; without the clip the full-α
+    # elastic pull parks the noisy worker at a fixed elevated distance
+    # and almost nothing is flagged). frac=0.5 guarantees corrupt slots
+    # on every sweep seed (the default 0.25 draws none on seeds 1–2).
+    ADV = {
+        "byzantine": (dict(byzantine_mode="noise", byzantine_frac=0.5,
+                           score_clip=0.5),
+                      1.0, 3),   # (spec kw, min corrupt-slot recall, max fp)
+        "hetero": ({}, None, 2),
+    }
+
+    @pytest.mark.parametrize("scenario", sorted(ADV))
+    def test_adversarial_precision_recall_floor(self, scenario):
+        spec_kw, min_recall, max_fp = self.ADV[scenario]
+        tot_c = hit_c = 0
+        for seed in self.SEEDS:
+            sess, records = accept_run(scenario, seed, "open", **spec_kw)
+            det = FailureDetector(4)
+            for rec in records:
+                det.observe(rec)
+            flags = [(r, s) for r, s, v in det.events
+                     if v == FAILED_SUSPECT]
+            sch = sess.schedule
+            fail = np.asarray(sch.fail[:self.ROUNDS], bool)
+            corrupt = (np.asarray(sch.corrupt[0], bool)
+                       if sch.corrupt is not None
+                       else np.zeros(fail.shape[1], bool))
+            # truth for false-flag counting = fail ∪ corrupt: a flag on a
+            # corrupt slot is never false, whenever it lands — the slot is
+            # poisoned for the whole run
+            fps = [(r, s) for r, s in flags
+                   if not corrupt[s]
+                   and not fail[max(0, r - 4):r + 1, s].any()]
+            assert len(fps) <= max_fp, (scenario, seed, fps)
+            tot_c += int(corrupt.sum())
+            hit_c += sum(1 for c in np.where(corrupt)[0]
+                         if any(s == c for _, s in flags))
+        if min_recall is not None:
+            assert tot_c > 0, "sweep drew no corrupt slots — raise frac"
+            assert hit_c / tot_c >= min_recall, (scenario, hit_c, tot_c)
