@@ -1,0 +1,199 @@
+"""Regression gate for the committed benchmark records (ISSUE-10 satellite).
+
+Diffs a *fresh* benchmark run against the ``BENCH_*.json`` records
+committed at the repo root: for every timing key shared by a committed
+section and its fresh re-run, flag a regression when
+
+    fresh > threshold · committed        (default threshold: 1.5x)
+
+and exit non-zero if any section regressed. Committed files come in two
+shapes and both are handled: bare JSON records carrying a ``what`` key
+(the ``--what <x>`` outputs of benchmarks/run.py), and wrapper documents
+``{"date", "host", "sections": {...}}`` whose sections are either JSON
+records or ``name,us_per_call,derived`` CSV row lists. Nested records
+(e.g. the scenarios arms) are flattened with dot-joined keys before
+comparison; only keys with a timing suffix (``_ms``, ``_ms_per_round``,
+``_us``, ``us_per_call``) are gated — counts, ratios and metadata are
+never regressions.
+
+Committed records were measured on whatever machine ran them — absolute
+times are not portable across hosts, which is why the CI step that runs
+this is non-blocking: the gate exists to catch structural regressions
+(an accidentally serialized scatter, a lost jit cache, a recompile per
+round), not 10% noise.
+
+Usage::
+
+    # fresh-run every section present in committed records and diff
+    python benchmarks/compare.py [--threshold 1.5] [--records BENCH_x.json]
+
+    # diff a pre-recorded fresh JSON record without running anything
+    python benchmarks/compare.py --fresh new.json
+
+Sections with no registered runner are skipped with a note.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+# JSON-record sections, keyed by the record's "what" field
+JSON_RUNNERS = {
+    "session": ("benchmarks.session_bench", "bench_session"),
+    "session_placement": ("benchmarks.session_bench",
+                          "bench_session_placement"),
+    "session_membership": ("benchmarks.session_bench",
+                           "bench_session_membership"),
+    "hierarchy": ("benchmarks.session_bench", "bench_hierarchy"),
+    "local": ("benchmarks.kernels_bench", "bench_local"),
+    "serving": ("benchmarks.serving_bench", "bench_serving"),
+    "scenarios": ("benchmarks.scenario_bench", "bench_scenarios"),
+    "control": ("benchmarks.control_bench", "bench_control"),
+}
+
+# CSV-row sections, keyed by section name in the wrapper document
+CSV_RUNNERS = {
+    "kernels": ("benchmarks.kernels_bench", "bench"),
+    "comm_modes": ("benchmarks.kernels_bench", "bench_comm_modes"),
+    "roofline": ("benchmarks.roofline_bench", "bench"),
+    "session": ("benchmarks.session_bench", "bench"),
+}
+
+TIMING_SUFFIXES = ("_ms", "_ms_per_round", "_us", "us_per_call")
+
+
+def flatten(record, prefix=""):
+    """Dot-join nested dict keys into one flat {key: number} mapping."""
+    out = {}
+    for key, val in record.items():
+        name = f"{prefix}{key}"
+        if isinstance(val, dict):
+            out.update(flatten(val, prefix=f"{name}."))
+        elif isinstance(val, (int, float)) and not isinstance(val, bool):
+            out[name] = val
+    return out
+
+
+def rows_to_record(rows):
+    """CSV row list [{"name", "us_per_call", ...}] -> flat timing record."""
+    return {f"{r['name']}_us": r["us_per_call"] for r in rows
+            if isinstance(r, dict) and isinstance(
+                r.get("us_per_call"), (int, float))}
+
+
+def committed_sections(doc):
+    """Yield (kind, key, flat_record) from a committed BENCH document,
+    where kind is 'json' (key = record's what) or 'csv' (key = section
+    name)."""
+    if isinstance(doc, dict) and "what" in doc:
+        yield "json", doc["what"], flatten(doc)
+        return
+    for name, val in (doc.get("sections") or {}).items():
+        if isinstance(val, dict) and "what" in val:
+            yield "json", val["what"], flatten(val)
+        elif isinstance(val, list):
+            yield "csv", name, rows_to_record(val)
+
+
+def run_fresh(kind, key):
+    import importlib
+
+    runners = JSON_RUNNERS if kind == "json" else CSV_RUNNERS
+    mod_name, fn_name = runners[key]
+    result = getattr(importlib.import_module(mod_name), fn_name)()
+    return flatten(result) if kind == "json" else rows_to_record(result)
+
+
+def compare_section(committed, fresh, threshold):
+    """Yield (key, old, new, ratio, regressed) over shared timing keys."""
+    for key in sorted(committed):
+        if not key.endswith(TIMING_SUFFIXES) or key not in fresh:
+            continue
+        old, new = committed[key], fresh[key]
+        if old <= 0:
+            continue
+        ratio = new / old
+        yield key, old, new, ratio, ratio > threshold
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", nargs="*", default=None,
+                    help="committed BENCH_*.json files (default: repo root)")
+    ap.add_argument("--fresh", default=None,
+                    help="pre-recorded fresh JSON record to diff instead of "
+                         "re-running (matched to committed sections by what)")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="regression if fresh > threshold * committed")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print every compared key, not just regressions")
+    args = ap.parse_args(argv)
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    records = args.records if args.records is not None else sorted(
+        glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not records:
+        print("compare: no committed BENCH_*.json records found")
+        return 0
+
+    fresh_fixed = None
+    if args.fresh:
+        with open(args.fresh) as f:
+            fresh_fixed = json.load(f)
+
+    failures = 0
+    fresh_cache = {}
+    for path in records:
+        with open(path) as f:
+            try:
+                doc = json.load(f)
+            except json.JSONDecodeError:
+                print(f"[skip] {os.path.basename(path)}: not valid JSON")
+                continue
+        for kind, key, committed in committed_sections(doc):
+            label = f"{os.path.basename(path)}:{key}"
+            if fresh_fixed is not None:
+                if kind != "json" or fresh_fixed.get("what") != key:
+                    continue
+                fresh = flatten(fresh_fixed)
+            elif (runners := (JSON_RUNNERS if kind == "json"
+                              else CSV_RUNNERS)) and key in runners:
+                if (kind, key) not in fresh_cache:
+                    print(f"[run ] {label}", flush=True)
+                    try:
+                        fresh_cache[(kind, key)] = run_fresh(kind, key)
+                    except Exception as e:  # noqa: BLE001 — dead bench = finding
+                        print(f"[FAIL] {label}: fresh run raised "
+                              f"{type(e).__name__}: {e}")
+                        failures += 1
+                        fresh_cache[(kind, key)] = None
+                        continue
+                fresh = fresh_cache[(kind, key)]
+                if fresh is None:
+                    continue
+            else:
+                print(f"[skip] {label}: no runner registered")
+                continue
+
+            section_bad = 0
+            for k, old, new, ratio, regressed in compare_section(
+                    committed, fresh, args.threshold):
+                if regressed or args.verbose:
+                    mark = "REGRESSED" if regressed else "ok"
+                    print(f"  {k}: {old} -> {new}  ({ratio:.2f}x)  {mark}")
+                section_bad += regressed
+            if section_bad:
+                print(f"[FAIL] {label}: {section_bad} timing key(s) over "
+                      f"{args.threshold}x")
+                failures += 1
+            else:
+                print(f"[ ok ] {label}")
+
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,7 +22,11 @@ row records that path's (expected, large) CPU overhead, and ``--what
 scenarios`` a JSON record measuring what the ISSUE-9 adversarial schedule
 channels cost per round (masked sign-flip corruption + score_clip
 quarantine, per-slot speed masks) against the channel-free clean trace at
-k ∈ {4, 8}."""
+k ∈ {4, 8}, and ``--what hierarchy`` a JSON record comparing flat fused
+vs two-level hierarchical communication (ISSUE-10) at k ∈ {16, 32, 64} —
+per-round comm time drops as global sub-master↔master syncs amortize over
+``global_period``, with a global-sync-count check and an end-to-end k=16
+no-worse-than-flat session comparison."""
 import argparse
 import json
 
@@ -33,7 +37,7 @@ def main(argv=None) -> None:
                     choices=["all", "kernels", "comm_modes", "local",
                              "paper", "roofline", "session", "placement",
                              "membership", "control", "serving",
-                             "scenarios"])
+                             "scenarios", "hierarchy"])
     args = ap.parse_args(argv)
 
     if args.what == "local":
@@ -76,6 +80,12 @@ def main(argv=None) -> None:
         from benchmarks import scenario_bench
 
         print(json.dumps(scenario_bench.bench_scenarios()))
+        return
+
+    if args.what == "hierarchy":
+        from benchmarks import session_bench
+
+        print(json.dumps(session_bench.bench_hierarchy()))
         return
 
     from benchmarks import (kernels_bench, paper_figs, roofline_bench,

@@ -142,6 +142,149 @@ def bench_session_membership(rounds=6, ks=(4, 8), capacities=(8, 16)):
     return record
 
 
+def bench_hierarchy(ks=(16, 32, 64), gps=(1, 2, 4), rack=4,
+                    comm_rounds=12, e2e_rounds=6, e2e_k=16):
+    """Hierarchical vs flat communication cost (ISSUE-10).
+
+    Comm-only axis: times the jitted communication phase alone (no local
+    phase — the hierarchy changes nothing there) at k slots, flat fused
+    vs hierarchical with k/``rack`` rack groups at each global period in
+    ``gps``. Per-round comm time drops as the sub-master ↔ master syncs
+    amortize: gp=1 pays the rack reduction *plus* a full global scoring +
+    reduction every round, while gp=4 touches the global master once per
+    4 rounds (``lax.cond`` skips the whole global phase off-cycle).
+    Global sync rounds are counted from the ``g_h2`` diagnostics and must
+    come out to timed_rounds / gp — the "global-comm rounds reduced by
+    global_period×" evidence. ``k*_gp*_global_bytes_per_round`` makes the
+    same point in link traffic: what a deployment's cross-rack fabric
+    carries per round (2 · G · params · 4 bytes per sync — every
+    sub-master pulls the master distance and pushes its weighted diff),
+    which falls exactly global_period× and is the cost the wall-clock
+    numbers can only approximate on a single shared-memory host.
+
+    End-to-end axis: whole-session ms/round at ``e2e_k`` workers on the
+    host mesh (sharded over pod = gcd(k, device_count) when the host has
+    multiple — typically forced — devices, single otherwise), flat fused
+    vs hierarchical at the largest period, at both τ=1 (every round pays
+    comm) and the paper-style τ=4. The hierarchy must not cost end-to-end
+    round time (``e2e_tau*_hier_over_flat`` ≈ ≤ 1).
+    """
+    import math
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api import ElasticSession, RunSpec
+    from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+    from repro.core.coordinator import ElasticTrainer
+    from repro.models.registry import build_model
+
+    model = build_model(get_config("paper_cnn"))
+    opt = OptimizerConfig(name="sgd", lr=0.01)
+    from repro.nn.param import init_tree
+    n_params = sum(int(np.prod(p.shape)) for p in
+                   jax.tree.leaves(init_tree(jax.random.key(0), model.spec)))
+    record = {"what": "hierarchy", "arch": "paper-cnn",
+              "devices": jax.device_count(), "rack": rack,
+              "master_params": n_params,
+              "global_periods": list(gps), "workers": list(ks),
+              "comm_rounds_timed": comm_rounds, "e2e_rounds_timed": e2e_rounds}
+
+    def time_comm(ecfg):
+        tr = ElasticTrainer(model, opt, ecfg)
+        state = tr.init_state(jax.random.key(0))
+        # Desync the workers so scoring sees a realistic u spread.
+        state["workers"] = jax.tree.map(
+            lambda x: x + 0.01 * jax.random.normal(
+                jax.random.key(1), x.shape, x.dtype), state["workers"])
+        fail = jnp.zeros((ecfg.cap,), bool)
+        comm = jax.jit(lambda s: tr.comm_phase(s, fail))
+        state, m = comm(state)  # compile (cond traces both branches)
+        jax.block_until_ready(state["master"])
+        # two timed reps, keep the min — CPU wall clock is noisy at this
+        # scale; sync rounds are counted once over the first rep via the
+        # g_u diagnostics (zeroed by the lax.cond skip branch; a genuine
+        # sync always records log-distances, which are never exactly 0)
+        best_ms, g_us = None, []
+        for rep in range(2):
+            collected = []  # device arrays; counted after the timed window
+            t0 = time.perf_counter()
+            for _ in range(comm_rounds):
+                state, m = comm(state)
+                if "g_u" in m:
+                    collected.append(m["g_u"])
+            jax.block_until_ready(state["master"])
+            ms = (time.perf_counter() - t0) / comm_rounds * 1e3
+            best_ms = ms if best_ms is None else min(best_ms, ms)
+            if rep == 0:
+                g_us = collected
+        syncs = (sum(int(np.any(np.asarray(g) != 0.0)) for g in g_us)
+                 if g_us else comm_rounds)
+        return round(best_ms, 3), syncs
+
+    for k in ks:
+        groups = max(1, k // rack)
+        record[f"k{k}_groups"] = groups
+        flat = ElasticConfig(num_workers=k, tau=1, dynamic=True,
+                             comm_mode="fused")
+        ms, syncs = time_comm(flat)
+        record[f"k{k}_flat_comm_ms"] = ms
+        record[f"k{k}_flat_global_syncs"] = syncs
+        # Flat: every worker talks to the global master every round.
+        record[f"k{k}_flat_global_bytes_per_round"] = 2 * k * n_params * 4
+        for gp in gps:
+            hier = ElasticConfig(num_workers=k, tau=1, dynamic=True,
+                                 comm_mode="fused", groups=groups,
+                                 global_period=gp)
+            ms, syncs = time_comm(hier)
+            record[f"k{k}_g{groups}_gp{gp}_comm_ms"] = ms
+            record[f"k{k}_g{groups}_gp{gp}_global_syncs"] = syncs
+            record[f"k{k}_g{groups}_gp{gp}_global_bytes_per_round"] = (
+                2 * groups * n_params * 4 * syncs // comm_rounds)
+        # Amortization evidence: every-round global sync vs the longest
+        # period, within the same hierarchical topology.
+        record[f"k{k}_gp{max(gps)}_over_gp{min(gps)}"] = round(
+            record[f"k{k}_g{groups}_gp{max(gps)}_comm_ms"]
+            / record[f"k{k}_g{groups}_gp{min(gps)}_comm_ms"], 3)
+
+    pod = math.gcd(e2e_k, jax.device_count())
+    placement = "sharded" if jax.device_count() > 1 else "single"
+    e2e_groups = max(1, e2e_k // rack)
+    record["e2e_k"] = e2e_k
+    record["e2e_placement"] = placement
+    record["e2e_pod"] = pod
+    record["e2e_groups"] = e2e_groups
+    for tau in (1, 4):
+        for label, (g, gp) in (("flat", (1, 1)),
+                               ("hier", (e2e_groups, max(gps)))):
+            spec = RunSpec(
+                arch="paper-cnn", optimizer=opt,
+                elastic=ElasticConfig(num_workers=e2e_k, tau=tau,
+                                      dynamic=True, comm_mode="fused",
+                                      placement=placement,
+                                      groups=g, global_period=gp),
+                rounds=1 + 2 * e2e_rounds, seed=0, batch_size=8,
+                n_data=512, n_test=64)
+            mesh = None
+            if placement == "sharded":
+                from repro.launch.mesh import make_host_mesh
+                mesh = make_host_mesh(pod=pod)
+            sess = ElasticSession(spec, mesh=mesh)
+            sess.run(1)  # compile + first-touch outside the timed window
+            ms = None  # two timed reps, keep the min (see time_comm)
+            for _ in range(2):
+                t0 = time.perf_counter()
+                sess.run(e2e_rounds)
+                rep = (time.perf_counter() - t0) / e2e_rounds * 1e3
+                ms = rep if ms is None else min(ms, rep)
+            record[f"e2e_tau{tau}_{label}_ms_per_round"] = round(ms, 3)
+        record[f"e2e_tau{tau}_hier_over_flat"] = round(
+            record[f"e2e_tau{tau}_hier_ms_per_round"]
+            / record[f"e2e_tau{tau}_flat_ms_per_round"], 3)
+    return record
+
+
 def bench():
     """CSV-section adapter for benchmarks/run.py."""
     r = bench_session()

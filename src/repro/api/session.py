@@ -64,6 +64,7 @@ step-time outlier signal.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 import warnings
 from typing import Iterator, List, Optional
@@ -205,6 +206,15 @@ class RoundRecord:
     # or when the scenario has no corruption channel). Trails the field
     # list with a default so older positional constructions keep working.
     corrupt: Optional[np.ndarray] = None
+    # (groups,) rack-level diagnostics (ISSUE-10): sub-master distance /
+    # score / h1 / h2 against the global master. ``None`` on flat runs;
+    # all-zero on hierarchical rounds that skip the global sync (the
+    # two-period cadence — a round's g_h2 is nonzero only every
+    # ``global_period`` rounds).
+    g_u: Optional[np.ndarray] = None
+    g_score: Optional[np.ndarray] = None
+    g_h1: Optional[np.ndarray] = None
+    g_h2: Optional[np.ndarray] = None
 
     @property
     def num_active(self) -> int:
@@ -249,7 +259,8 @@ class ElasticSession:
             ecfg = dataclasses.replace(ecfg, num_workers=1, capacity=0,
                                        tau=1, overlap_ratio=0.0,
                                        failure_prob=0.0, placement="single",
-                                       membership_scenario="static")
+                                       membership_scenario="static",
+                                       groups=1, global_period=1)
         self.ecfg = ecfg
         self.capacity = ecfg.cap
         self._sharded = ecfg.placement == "sharded"
@@ -537,10 +548,24 @@ class ElasticSession:
         meta = {"rounds": self.round, "arch": self.model_cfg.name,
                 "scenario": ("none" if self.spec.plain
                              else self.ecfg.failure_scenario)}
+        hier = not self.spec.plain and getattr(self.trainer, "_hier", False)
         if not self.spec.plain:
             meta["elastic"] = checkpoint.elastic_manifest(
-                self._active, np.asarray(self.state["u_hist"], np.float32))
+                self._active, np.asarray(self.state["u_hist"], np.float32),
+                **({"groups": self.trainer._n_groups,
+                    "global_period": self.ecfg.global_period,
+                    "g_u_hist": np.asarray(self.state["g_u_hist"],
+                                           np.float32)} if hier else {}))
         meta.update(extra_metadata or {})
+        if hier:
+            # sub-master params ride in a sibling sub-checkpoint, written
+            # *before* the main manifest — the manifest-last completeness
+            # ordering (read_fingerprint) then covers them too. The main
+            # tree stays a bare master-params tree, so flat consumers
+            # (serving hot-swap ``restore(like=master)``) read
+            # hierarchical checkpoints unchanged.
+            checkpoint.save(os.path.join(path, "submasters"),
+                            self.state["submasters"])
         checkpoint.save(path, self.master_params, metadata=meta)
         return path
 
@@ -584,6 +609,21 @@ class ElasticSession:
         state["master"] = master
         state["master_prev"] = jax.tree.map(jnp.copy, master)
         state["u_hist"] = jnp.asarray(u_hist)
+        if getattr(self.trainer, "_hier", False):
+            # hierarchical warm start (ISSUE-10), possibly at a different
+            # group count: saved racks carry their sub-masters/histories
+            # across in order, extra racks cold-start from the master; a
+            # flat checkpoint seats every rack from the master
+            sub_path = os.path.join(path, "submasters")
+            saved = None
+            if os.path.exists(os.path.join(sub_path, "manifest.json")):
+                saved, _ = checkpoint.restore(sub_path)
+            n_groups = self.trainer._n_groups
+            state["submasters"] = checkpoint.reseat_submasters(
+                saved, master, n_groups)
+            state["g_u_hist"] = jnp.asarray(checkpoint.reseat_group_hist(
+                (meta.get("elastic") or {}).get("g_u_hist"), n_groups,
+                self.ecfg.score_window))
         self.state = self._place_state(state) if self._sharded else state
         return meta
 
@@ -700,7 +740,10 @@ class ElasticSession:
                 active=(self._membership[r] if self._membership is not None
                         else np.ones(self.capacity, bool)),
                 loss_w=m["loss_w"][i],
-                round_ms=round_ms, dispatch_ms=dispatch_ms))
+                round_ms=round_ms, dispatch_ms=dispatch_ms,
+                **({"g_u": m["g_u"][i], "g_score": m["g_score"][i],
+                    "g_h1": m["g_h1"][i], "g_h2": m["g_h2"][i]}
+                   if "g_u" in m else {})))
         return records
 
     def _run_chunk_plain(self, n: int) -> List[RoundRecord]:

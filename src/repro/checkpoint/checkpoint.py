@@ -180,17 +180,31 @@ def restore(path: str, like=None):
 # elastic worker-pool membership manifests (ISSUE-5)
 # ---------------------------------------------------------------------------
 
-def elastic_manifest(active, u_hist) -> dict:
+def elastic_manifest(active, u_hist, *, groups: Optional[int] = None,
+                     global_period: Optional[int] = None,
+                     g_u_hist=None) -> dict:
     """JSON-able per-slot membership record stored in checkpoint metadata:
     capacity, the live mask, and each slot's u-history window (what a
     restore re-seats; worker params are deliberately *not* stored — a
-    restore is a pool-wide rejoin from the master)."""
+    restore is a pool-wide rejoin from the master).
+
+    Hierarchical runs (ISSUE-10) additionally record the topology
+    (``groups``/``global_period``) and the rack-level distance histories
+    ``g_u_hist`` — sub-master *params* live in a sibling sub-checkpoint
+    (``ElasticSession.save``), not in metadata."""
     active = np.asarray(active, bool)
     u_hist = np.asarray(u_hist, np.float32)
     assert u_hist.shape[0] == active.shape[0]
-    return {"capacity": int(active.shape[0]),
-            "active": active.astype(int).tolist(),
-            "u_hist": [[float(v) for v in row] for row in u_hist]}
+    out = {"capacity": int(active.shape[0]),
+           "active": active.astype(int).tolist(),
+           "u_hist": [[float(v) for v in row] for row in u_hist]}
+    if groups is not None:
+        out["groups"] = int(groups)
+        out["global_period"] = int(global_period or 1)
+        if g_u_hist is not None:
+            out["g_u_hist"] = [[float(v) for v in row]
+                               for row in np.asarray(g_u_hist, np.float32)]
+    return out
 
 
 def reseat_u_hist(elastic_meta: Optional[dict], capacity: int, active_now,
@@ -217,6 +231,50 @@ def reseat_u_hist(elastic_meta: Optional[dict], capacity: int, active_now,
     if m and w:
         out[targets[:m], window - w:] = live[:m, live.shape[1] - w:]
     return out
+
+
+def reseat_group_hist(g_u_hist, n_groups: int, window: int,
+                      fill: float = U_HIST_FILL) -> np.ndarray:
+    """Re-seat a checkpoint's rack-level u-histories (ISSUE-10) into a
+    hierarchy of possibly different group count: the first
+    ``min(saved, n_groups)`` racks carry their histories across (group
+    assignment is contiguous-by-slot-order under any count, so low racks
+    map onto low racks); extra racks cold-start blank. Windows align on
+    the newest entries like :func:`reseat_u_hist`. ``None``/malformed
+    input (a flat checkpoint) yields all-blank."""
+    out = np.full((n_groups, window), fill, np.float32)
+    if g_u_hist is None:
+        return out
+    g_u_hist = np.asarray(g_u_hist, np.float32)
+    if g_u_hist.ndim != 2:
+        return out
+    g = min(n_groups, g_u_hist.shape[0])
+    w = min(window, g_u_hist.shape[1])
+    if g and w:
+        out[:g, window - w:] = g_u_hist[:g, g_u_hist.shape[1] - w:]
+    return out
+
+
+def reseat_submasters(saved, master, n_groups: int):
+    """Re-seat saved sub-master params into ``n_groups`` racks: rack g
+    takes the saved rack g's sub-master for g < saved count, and a master
+    copy otherwise (a new rack joins like a new worker — cold-started from
+    the global master). ``saved=None`` (a flat checkpoint restored into a
+    hierarchical session) seats every rack from the master. Returns a
+    float32 pytree with leading (n_groups,) axes."""
+    def from_master(m):
+        m = jnp.asarray(m, jnp.float32)
+        return jnp.broadcast_to(m, (n_groups,) + m.shape).copy()
+
+    if saved is None:
+        return jax.tree.map(from_master, master)
+
+    def seat(sm, m):
+        sm = jnp.asarray(sm, jnp.float32)
+        g = min(n_groups, sm.shape[0])
+        return from_master(m).at[:g].set(sm[:g])
+
+    return jax.tree.map(seat, saved, master)
 
 
 def _unflatten_paths(flat: Dict[str, np.ndarray]):

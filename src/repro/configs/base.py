@@ -221,6 +221,33 @@ class ElasticConfig:
     # bit-identical to the paper's maps. Applies to both comm backends
     # (the clamp lives in dynamic_weight.weights_for).
     score_clip: float = 0.0
+    # Absolute-distance containment (beyond-paper; ROADMAP item 5 /
+    # docs/paper_map.md deviation #10). score_clip clamps the distance
+    # *trend*, so an attack that parks a worker at a huge-but-static
+    # distance (noise-mode corruption under AdaHessian's
+    # curvature-normalized steps) has a raw score ≈ 0 and sails under the
+    # clip. With u_zclip > 0 the master additionally refuses (w2 = 0) any
+    # worker whose log-distance u sits more than u_zclip robust z-scores
+    # (median / 1.4826·MAD) above the live pool's u distribution — a
+    # cross-sectional term, so it lives in the batched scoring paths
+    # (fused + hierarchical comm; the sequential scan computes u one
+    # worker at a time against an evolving master and has no pool
+    # snapshot to stand on). 0 disables it, bit-identically.
+    u_zclip: float = 0.0
+    # Hierarchical elastic averaging (tree-EASGD; the extension §VI of
+    # Zhang et al.'s EASGD sketches and this repo builds). The
+    # capacity-padded worker axis is partitioned into `groups` contiguous
+    # rack-sized groups, each owning a *sub-master*: workers
+    # elastic-average against their group's sub-master every round (τ
+    # local steps), and the sub-masters elastic-average against the
+    # global master every `global_period` rounds (τ_g = global_period·τ)
+    # with their own h1/h2 dynamic weights — a dead rack is down-weighted
+    # at the global level exactly as a dead worker is at the rack level.
+    # groups=1, global_period=1 is the flat topology (sub-master ≡
+    # master, bit-exact with the non-hierarchical fused coordinator).
+    # Requires comm_mode="fused" when non-trivial.
+    groups: int = 1
+    global_period: int = 1
     # Membership scenario engine (repro/core/scenarios.py): a planned
     # (rounds, capacity) active-mask stream riding alongside the failure
     # masks. "static" keeps the initial num_workers slots live; scale_up /
@@ -237,6 +264,14 @@ class ElasticConfig:
         """Padded worker-axis length: ``capacity`` slots (>= num_workers),
         or exactly ``num_workers`` when capacity is left at 0."""
         return self.capacity or self.num_workers
+
+    @property
+    def hierarchical(self) -> bool:
+        """True when the two-level coordinator is non-trivially configured
+        (more than one rack, or an amortized global sync period). The
+        trivial (1, 1) topology runs the flat coordinator — bit-exactly —
+        unless a trainer forces the hierarchical state on for proofs."""
+        return self.groups > 1 or self.global_period > 1
 
     def __post_init__(self):
         if self.comm_mode not in ("sequential", "fused"):
@@ -303,6 +338,32 @@ class ElasticConfig:
             raise ValueError(
                 f"score_clip must be >= 0 (0 disables the clamp), "
                 f"got {self.score_clip}")
+        if self.u_zclip < 0:
+            raise ValueError(
+                f"u_zclip must be >= 0 (0 disables the absolute-distance "
+                f"containment), got {self.u_zclip}")
+        if self.groups < 1:
+            raise ValueError(f"groups must be >= 1, got {self.groups}")
+        if self.global_period < 1:
+            raise ValueError(
+                f"global_period must be >= 1, got {self.global_period}")
+        if self.groups > self.cap:
+            raise ValueError(
+                f"groups={self.groups} exceeds the worker capacity "
+                f"{self.cap} — a rack needs at least one slot")
+        if self.hierarchical and self.comm_mode != "fused":
+            raise ValueError(
+                "hierarchical averaging (groups > 1 or global_period > 1) "
+                "requires comm_mode='fused': the group sync reuses the "
+                "batched scoring + event-order-equivalent reduction, and "
+                "the sequential backend's serial master dependency has no "
+                "per-rack meaning")
+        if self.hierarchical and self.staleness:
+            raise ValueError(
+                "hierarchical averaging does not compose with staleness=1 "
+                "(delayed averaging references the previous global master; "
+                "under a hierarchy the workers' sync target is their "
+                "sub-master, which has no one-round-stale snapshot)")
         if self.membership_scenario not in MEMBERSHIP_SCENARIOS:
             raise ValueError(
                 f"membership_scenario must be one of {MEMBERSHIP_SCENARIOS},"

@@ -81,7 +81,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ElasticConfig, OptimizerConfig
 from repro.core import dynamic_weight as dw
-from repro.core.elastic import elastic_update, elastic_update_batched
+from repro.core.elastic import (elastic_update, elastic_update_batched,
+                                elastic_update_grouped)
 from repro.optim.adahessian import spatial_average
 from repro.optim.base import apply_updates, make_optimizer
 from repro.optim.hutchinson import hessian_diag, hessian_diag_with_grad
@@ -173,6 +174,13 @@ class ElasticTrainer:
     # measures the jnp-fused variant this way). AdaHessian-only — other
     # optimizers fall back to the plain path.
     fused_local: Any = None
+    # Hierarchical averaging (ISSUE-10): None (default) follows
+    # ``ecfg.hierarchical`` (groups > 1 or global_period > 1); an explicit
+    # True forces the hierarchical state/comm structure even at the trivial
+    # groups=1, global_period=1 topology, where it collapses to the flat
+    # fused phase bit-for-bit (the degenerate-equivalence proof in
+    # tests/test_hierarchy.py runs exactly this).
+    hierarchical: Any = None
 
     def __post_init__(self):
         self.opt = make_optimizer(self.opt_cfg)
@@ -180,6 +188,21 @@ class ElasticTrainer:
             (self.use_pallas if self.fused_local is None
              else bool(self.fused_local))
             and self.opt_cfg.name == "adahessian")
+        self._hier = (self.ecfg.hierarchical if self.hierarchical is None
+                      else bool(self.hierarchical))
+        if self._hier:
+            if self.ecfg.comm_mode != "fused":
+                raise ValueError(
+                    "hierarchical averaging needs comm_mode='fused' (the "
+                    "sequential scan has no grouped equivalent)")
+            if self.ecfg.staleness:
+                raise ValueError(
+                    "hierarchical averaging is incompatible with "
+                    "staleness=1 (workers sync against sub-masters; there "
+                    "is no stale sub-master snapshot)")
+            # static slot→group map; group count after clamping to capacity
+            self._grp = dw.group_assignment(self.ecfg.cap, self.ecfg.groups)
+            self._n_groups = int(self._grp.max()) + 1
         if self.ecfg.placement == "sharded":
             if self.mesh is None:
                 raise ValueError(
@@ -210,7 +233,7 @@ class ElasticTrainer:
         master = jax.tree.map(lambda x: x.astype(jnp.float32), params)
         worker_params = tree_stack_copies(params, k)
         worker_opt = jax.vmap(self.opt.init)(worker_params)
-        return {
+        state = {
             "workers": worker_params,
             "opt": worker_opt,
             "master": master,
@@ -223,6 +246,13 @@ class ElasticTrainer:
                                jnp.float32),
             "round": jnp.zeros((), jnp.int32),
         }
+        if self._hier:
+            # one sub-master per rack, seeded from the master like workers;
+            # rack-level distance history mirrors the worker u_hist shape
+            state["submasters"] = tree_stack_copies(master, self._n_groups)
+            state["g_u_hist"] = jnp.full(
+                (self._n_groups, self.ecfg.score_window), -30.0, jnp.float32)
+        return state
 
     # -- failure-scenario state transitions --------------------------------------
     def apply_restarts(self, state, restart):
@@ -489,6 +519,9 @@ class ElasticTrainer:
         if failed_recent is None:
             failed_recent = jnp.zeros_like(fail_mask)
         if ecfg.comm_mode == "fused":
+            if self._hier:
+                return self._comm_phase_hier(state, fail_mask, failed_recent,
+                                             straggle, active, axis)
             return self._comm_phase_fused(state, fail_mask, failed_recent,
                                           straggle, active, axis)
         if axis is not None:  # unreachable: ElasticConfig validates this
@@ -610,7 +643,7 @@ class ElasticTrainer:
             failed_recently=failed_recent,
             stale_master=(None if straggle is None
                           else state.get("master_prev", master)),
-            straggle=straggle)
+            straggle=straggle, active=active, axis_name=axis)
         # suppressed communication: no elastic exchange at all. A vacant
         # (inactive) slot additionally freezes its u-history and zeroes its
         # diagnostics — it contributes g_i = 0 to the master reduction,
@@ -641,6 +674,156 @@ class ElasticTrainer:
         return dict(state, workers=workers, master=master,
                     master_prev=state["master"], u_hist=hist,
                     round=state["round"] + 1), metrics
+
+    def _comm_phase_hier(self, state, fail_mask, failed_recent,
+                         straggle=None, active=None, axis=None):
+        """Two-level hierarchical communication (ISSUE-10, tree-EASGD).
+
+        **Rack level, every round**: each worker scores and elastic-averages
+        against its group's *sub-master* — the same batched scoring +
+        event-order-equivalent reduction as the flat fused phase, with the
+        schedule weights grouped (``master_schedule_weights_grouped``) so
+        every sub-master matches a per-rack sequential scan. The (G, ...)
+        sub-master trees are replicated under sharded placement; the
+        grouped reduction all-gathers the weighted pushes and performs the
+        identical full scatter-add on every shard, so sub-masters stay
+        bit-exact across placements (see ``elastic_update_grouped``).
+
+        **Global level, every** ``global_period`` **rounds**: sub-masters
+        play the worker role against the global master — their own
+        u-history (``g_u_hist``), raw scores and dynamic h1/h2, the same
+        event-order weights, one ``elastic_update_batched``. A rack with no
+        syncing member this round (all failed/vacant — e.g. a correlated
+        rack outage) is down-weighted exactly like a dead worker at rack
+        level: gw1 = gw2 = 0, no exchange, while a merely *dark* history
+        still records the drift. A fully vacant rack freezes its history
+        and zeroes its diagnostics, like a vacant slot. Off-cycle rounds
+        skip the global phase entirely under ``lax.cond`` — no comparison,
+        no distance computation, no master traffic — which is the
+        per-round comm saving the hierarchy buys (benchmarks/run.py
+        ``--what hierarchy``). Everything the global phase reads is
+        replicated or all-gathered, so it runs identically on every shard
+        with zero collectives of parameter size.
+
+        **Degenerate topology** (groups=1 and global_period=1): statically
+        collapses to the flat fused phase — the master trajectory is
+        bit-exact with ``_comm_phase_fused`` by construction — and the
+        single sub-master mirrors the new master (a global sync through a
+        lone all-member rack is the flat exchange twice over; mirroring
+        keeps the checkpointable hierarchical state consistent without
+        perturbing the proof trajectory).
+
+        Stragglers score against their live sub-master (no stale-snapshot
+        variant at rack granularity — there is no ``submaster_prev``);
+        ``staleness=1`` is rejected at construction.
+        """
+        ecfg = self.ecfg
+        G = self._n_groups
+        if G == 1 and ecfg.global_period == 1:
+            new_state, metrics = self._comm_phase_fused(
+                state, fail_mask, failed_recent, straggle, active, axis)
+            new_state["submasters"] = jax.tree.map(
+                lambda m: m[None], new_state["master"])
+            z = jnp.zeros((1,), jnp.float32)
+            metrics.update(g_u=z, g_score=z, g_h1=z, g_h2=z)
+            return new_state, metrics
+
+        master = state["master"]
+        submasters = state["submasters"]
+        grp = jnp.asarray(self._grp)
+        if axis is not None:
+            k_loc = fail_mask.shape[0]
+            i0 = jax.lax.axis_index(axis) * k_loc
+            grp_local = jax.lax.dynamic_slice_in_dim(grp, i0, k_loc)
+        else:
+            grp_local = grp
+        # each worker's reference: its rack's sub-master row
+        sub_ref = jax.tree.map(lambda sm: jnp.take(sm, grp_local, axis=0),
+                               submasters)
+
+        workers_in = state["workers"]
+        u = dw.log_distance_batched_ref(workers_in, sub_ref)
+        if ecfg.score_clip > 0:
+            # quarantine (ISSUE-9), as in the flat fused phase, but the
+            # re-seat target is the worker's sub-master; the recorded u is
+            # exactly log_distance(sub_ref, sub_ref)
+            quar = ~jnp.isfinite(u)
+            workers_in = jax.tree.map(
+                lambda w, r: jnp.where(
+                    quar.reshape((-1,) + (1,) * (w.ndim - 1)),
+                    r.astype(w.dtype), w),
+                workers_in, sub_ref)
+            u = jnp.where(quar, jnp.log(jnp.float32(1e-30)), u)
+        hist = dw.push_history(state["u_hist"], u)
+        a = dw.raw_score(hist, ecfg.score_weights)
+        w1, w2 = dw.weights_for(ecfg, a, failed_recently=failed_recent,
+                                u=u, live=active, axis_name=axis)
+        dead = (fail_mask if active is None
+                else jnp.logical_or(fail_mask, ~active))
+        w1 = jnp.where(dead, 0.0, w1)
+        w2 = jnp.where(dead, 0.0, w2)
+        if active is not None:
+            hist = jnp.where(active[:, None], hist, state["u_hist"])
+            u = jnp.where(active, u, 0.0)
+            a = jnp.where(active, a, 0.0)
+
+        # grouped event-order weights couple workers within a rack only,
+        # but a shard may hold a rack fragment — compute on the full (k,)
+        # h2 vector, identically on every shard, and slice back
+        if axis is not None:
+            w2_full = jax.lax.all_gather(w2, axis, axis=0, tiled=True)
+            g2 = jax.lax.dynamic_slice_in_dim(
+                dw.master_schedule_weights_grouped(w2_full, grp), i0, k_loc)
+        else:
+            g2 = dw.master_schedule_weights_grouped(w2, grp)
+        workers, submasters = elastic_update_grouped(
+            workers_in, submasters, w1, g2, self._grp, axis_name=axis)
+
+        # rack liveness, from the full masks (replicated across shards)
+        gather = (lambda x: x) if axis is None else (
+            lambda x: jax.lax.all_gather(x, axis, axis=0, tiled=True))
+        as_i32 = lambda b: b.astype(jnp.int32)
+        seg_any = lambda b: (jnp.zeros((G,), jnp.int32)
+                             .at[grp].max(as_i32(b))) > 0
+        g_synced = seg_any(~gather(dead))   # some member exchanged
+        g_live = (jnp.ones((G,), bool) if active is None
+                  else seg_any(gather(active)))
+        g_fr = seg_any(gather(failed_recent))
+
+        round_new = state["round"] + 1
+
+        def global_sync(args):
+            subs, mast, g_hist = args
+            g_u = dw.log_distance_batched(subs, mast)
+            g_hist_new = dw.push_history(g_hist, g_u)
+            g_hist_new = jnp.where(g_live[:, None], g_hist_new, g_hist)
+            g_a = dw.raw_score(g_hist_new, ecfg.score_weights)
+            gw1, gw2 = dw.weights_for(ecfg, g_a, failed_recently=g_fr,
+                                      u=g_u, live=g_live)
+            g_dead = ~g_synced
+            gw1 = jnp.where(g_dead, 0.0, gw1)
+            gw2 = jnp.where(g_dead, 0.0, gw2)
+            gg2 = dw.master_schedule_weights(gw2)
+            subs2, mast2 = elastic_update_batched(subs, mast, gw1, gg2)
+            g_u = jnp.where(g_live, g_u, 0.0)
+            g_a = jnp.where(g_live, g_a, 0.0)
+            return subs2, mast2, g_hist_new, (g_u, g_a, gw1, gw2)
+
+        def global_skip(args):
+            subs, mast, g_hist = args
+            z = jnp.zeros((G,), jnp.float32)
+            return subs, mast, g_hist, (z, z, z, z)
+
+        submasters, master, g_hist, (g_u, g_a, gw1, gw2) = jax.lax.cond(
+            (round_new % ecfg.global_period) == 0, global_sync, global_skip,
+            (submasters, master, state["g_u_hist"]))
+
+        metrics = {"u": u, "score": a, "h1": w1, "h2": w2,
+                   "g_u": g_u, "g_score": g_a, "g_h1": gw1, "g_h2": gw2}
+        return dict(state, workers=workers, master=master,
+                    master_prev=state["master"], u_hist=hist,
+                    submasters=submasters, g_u_hist=g_hist,
+                    round=round_new), metrics
 
     # -- full round ---------------------------------------------------------------
     def _round(self, state, inputs: RoundInputs, axis=None):
@@ -706,8 +889,14 @@ class ElasticTrainer:
         from jax.sharding import PartitionSpec as P
 
         wrk, rep = P(POD_AXIS), P()
-        return {"workers": wrk, "opt": wrk, "master": rep,
-                "master_prev": rep, "u_hist": wrk, "round": rep}
+        specs = {"workers": wrk, "opt": wrk, "master": rep,
+                 "master_prev": rep, "u_hist": wrk, "round": rep}
+        if self._hier:
+            # sub-masters and their history replicate like the master: the
+            # grouped reduction rebuilds them identically on every shard
+            specs["submasters"] = rep
+            specs["g_u_hist"] = rep
+        return specs
 
     def _shard_specs(self, inputs: RoundInputs, chunk: bool):
         """``shard_map`` partition specs for (state, inputs, metrics).
@@ -734,6 +923,9 @@ class ElasticTrainer:
             corrupt=mask(inputs.corrupt), speed=mask(inputs.speed))
         met_spec = {"u": wrk, "score": wrk, "h1": wrk, "h2": wrk,
                     "loss": rep, "loss_w": wrk}
+        if self._hier:
+            # rack-level diagnostics are (G,)-replicated, like the master
+            met_spec.update(g_u=rep, g_score=rep, g_h1=rep, g_h2=rep)
         return state_spec, in_spec, met_spec
 
     def _round_sharded(self, state, inputs: RoundInputs, chunk: bool):

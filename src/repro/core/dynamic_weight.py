@@ -82,9 +82,77 @@ def log_distance_batched(worker_stacked, master_params) -> jax.Array:
     return jax.vmap(lambda w: log_distance(w, master_params))(worker_stacked)
 
 
+def log_distance_batched_ref(worker_stacked, ref_stacked) -> jax.Array:
+    """u for all k workers, each against its *own* reference tree.
+
+    Both pytrees carry a leading (k,) axis; worker i is measured against
+    ``ref_stacked[i]``. The hierarchical coordinator uses this with the
+    per-worker gathered sub-master rows (each worker scores against its
+    rack's sub-master, not the global master)."""
+    return jax.vmap(log_distance)(worker_stacked, ref_stacked)
+
+
+def robust_zscore(u: jax.Array, live=None) -> jax.Array:
+    """Robust z-score of each u against the live pool's u distribution:
+    (u − median) / (1.4826·MAD + eps), median/MAD over live entries only.
+
+    Non-live entries still get a z (measured against the live pool) but do
+    not contaminate the statistics. Degenerate pools are safe: a pool
+    whose live u are all equal has MAD 0 and the eps keeps z finite (and
+    huge for any outlier, which is the point); a single live worker is its
+    own median, z = 0. NaN/inf u produce NaN z — callers refuse those via
+    ``comparison-fails-closed`` like the score_clip path."""
+    u = jnp.asarray(u, jnp.float32)
+    masked = u if live is None else jnp.where(live, u, jnp.nan)
+    med = jnp.nanmedian(masked)
+    mad = jnp.nanmedian(jnp.abs(masked - med))
+    return (u - med) / (1.4826 * mad + 1e-6)
+
+
+def group_assignment(capacity: int, groups: int):
+    """Static slot→group map of the hierarchical coordinator: ``capacity``
+    slots split into ``groups`` contiguous near-equal blocks,
+    ``grp[i] = i·G // C`` — the same balanced split the rack-correlated
+    failure scenario uses (``CorrelatedScenario.group_of``), so a
+    correlated outage takes out whole hierarchy racks. Handles capacity
+    not divisible by groups (block sizes differ by at most one; no group
+    is ever empty for groups <= capacity). Returns a numpy int32 array —
+    a trace-time constant, never a traced value."""
+    import numpy as np
+
+    g = min(groups, capacity)
+    return ((np.arange(capacity) * g) // capacity).astype(np.int32)
+
+
+def master_schedule_weights_grouped(w2: jax.Array, grp) -> jax.Array:
+    """Per-group event-order-equivalent weights (hierarchical coordinator).
+
+    Within each group the sequential-scan discount applies among that
+    group's members only — worker i's pull on its *sub-master* is
+    discounted by every later worker of the same group:
+
+        g_i = h2_i · Π_{j>i, grp[j]=grp[i]} (1 − h2_j)
+
+    so each sub-master reduction matches an event-ordered per-rack scan.
+    ``grp`` is the static (k,) slot→group map (``group_assignment``).
+    Implemented as a masked O(k²) product over scalars — k is at most a
+    few hundred slots and this is weights-only, no parameter traffic.
+    With one group this equals :func:`master_schedule_weights` up to
+    product re-association (the flat path stays on the cumprod form)."""
+    w2 = jnp.asarray(w2, jnp.float32)
+    grp = jnp.asarray(grp)
+    k = w2.shape[0]
+    om = 1.0 - w2
+    later_same_group = (jnp.arange(k)[None, :] > jnp.arange(k)[:, None]) \
+        & (grp[None, :] == grp[:, None])
+    excl = jnp.prod(jnp.where(later_same_group, om[None, :], 1.0), axis=1)
+    return w2 * excl
+
+
 def comm_scores_batched(cfg: ElasticConfig, worker_stacked, master_params,
                         u_hist: jax.Array, *, failed_recently=None,
-                        stale_master=None, straggle=None):
+                        stale_master=None, straggle=None, active=None,
+                        axis_name=None):
     """Fused-mode scoring: all k log-distances, history pushes, raw scores
     and h1/h2 weights computed in one batched pass against the round-start
     master (no per-worker sequencing).
@@ -99,6 +167,12 @@ def comm_scores_batched(cfg: ElasticConfig, worker_stacked, master_params,
     one cross-worker quantity in the fused comm phase is the master
     schedule weighting; see :func:`master_schedule_weights`'s ``axis_name``.
 
+    ``active`` (optional (k,) bool) + ``cfg.u_zclip > 0``: the
+    absolute-distance containment — w2 is additionally refused for any
+    worker whose u sits beyond a robust z-score of the *live pool's* u
+    distribution (``axis_name`` all-gathers the k u scalars so the
+    statistics cover the whole pool under sharded placement).
+
     Returns ``(u, hist_new, a, w1, w2)`` with leading (k,) axes.
     """
     u = log_distance_batched(worker_stacked, master_params)
@@ -107,7 +181,8 @@ def comm_scores_batched(cfg: ElasticConfig, worker_stacked, master_params,
         u = jnp.where(straggle, u_stale, u)
     hist_new = push_history(u_hist, u)
     a = raw_score(hist_new, cfg.score_weights)
-    w1, w2 = weights_for(cfg, a, failed_recently=failed_recently)
+    w1, w2 = weights_for(cfg, a, failed_recently=failed_recently,
+                         u=u, live=active, axis_name=axis_name)
     return u, hist_new, a, w1, w2
 
 
@@ -144,7 +219,8 @@ def master_schedule_weights(w2: jax.Array, *, axis_name=None) -> jax.Array:
     return w2 * excl
 
 
-def weights_for(cfg: ElasticConfig, a, *, failed_recently=None):
+def weights_for(cfg: ElasticConfig, a, *, failed_recently=None,
+                u=None, live=None, axis_name=None):
     """(h1, h2) for a raw score; supports fixed-α and oracle modes.
 
     Dynamic mode applies the ``score_clip`` robustness clamp (module
@@ -152,6 +228,20 @@ def weights_for(cfg: ElasticConfig, a, *, failed_recently=None):
     may still pull itself toward the master (h1 untouched; that only helps
     re-anchor it), but the master refuses the exchange. Fixed-α and oracle
     modes are deliberately exempt: they are the paper's baselines.
+
+    Absolute-distance containment (``cfg.u_zclip > 0``, ROADMAP item 5):
+    when the (k,) log-distances ``u`` are supplied, w2 is also refused for
+    any worker whose u exceeds a robust z-score of ``u_zclip`` over the
+    live pool's u distribution (``live`` masks the pool; ``None`` = all
+    live). This is the cross-sectional complement to score_clip's trend
+    clamp — a worker *parked* at a huge but static distance (the measured
+    noise-mode + AdaHessian attack, deviation #10) has score ≈ 0 yet
+    stands z-scores away from every honest worker. Scalar/sequential
+    callers pass no ``u`` and are untouched: the containment needs a pool
+    snapshot, which only the batched scoring paths have. ``axis_name``
+    (sharded placement) all-gathers the k u/live scalars so the pool
+    statistics span every shard. Like score_clip, the refusal comparison
+    fails closed on NaN z.
     """
     if cfg.oracle:
         assert failed_recently is not None
@@ -169,4 +259,19 @@ def weights_for(cfg: ElasticConfig, a, *, failed_recently=None):
         # fail the comparison
         w2 = jnp.where(jnp.asarray(a, jnp.float32) <= cfg.score_clip,
                        w2, 0.0)
+    if cfg.u_zclip > 0 and u is not None:
+        u_all = jnp.asarray(u, jnp.float32)
+        live_all = live
+        if axis_name is not None:
+            u_all = jax.lax.all_gather(u_all, axis_name, axis=0, tiled=True)
+            if live is not None:
+                live_all = jax.lax.all_gather(live, axis_name, axis=0,
+                                              tiled=True)
+        z_all = robust_zscore(u_all, live_all)
+        if axis_name is not None:
+            i0 = jax.lax.axis_index(axis_name) * jnp.shape(u)[0]
+            z = jax.lax.dynamic_slice_in_dim(z_all, i0, jnp.shape(u)[0])
+        else:
+            z = z_all
+        w2 = jnp.where(z <= cfg.u_zclip, w2, 0.0)
     return w1, w2

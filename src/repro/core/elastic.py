@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _unzip_pairs(pairs):
@@ -88,3 +89,113 @@ def elastic_update_batched(worker_stacked, master_params, w1, w2,
     else:
         pairs = jax.tree.map(upd, worker_stacked, master_params, master_ref)
     return _unzip_pairs(pairs)
+
+
+def elastic_update_grouped(worker_stacked, submasters, w1, w2, grp,
+                           axis_name=None):
+    """Rack-level exchange: every worker syncs against its group's sub-master.
+
+    ``submasters`` leaves carry a leading group axis (G, ...); ``grp`` is the
+    static (capacity,) slot→group assignment. Each worker i is pulled toward
+    its own sub-master and each sub-master accumulates its members' pushes:
+
+        θ^i   ← θ^i   − w1_i · (θ^i − θ^s_{g(i)})
+        θ^s_g ← θ^s_g + Σ_{i : g(i)=g} w2_i · (θ^i − θ^s_{g(i)})
+
+    Pass ``dynamic_weight.master_schedule_weights_grouped(h2, grp)`` as
+    ``w2`` so each group's reduction matches a sequential event-ordered scan
+    of its own members (groups are independent: worker j in another group
+    never discounts worker i's push).
+
+    With ``axis_name`` (sharded placement, inside ``shard_map``): the worker
+    leaves/weights hold only this shard's slots; sub-masters are replicated.
+    The weighted pushes are all-gathered to the full (capacity, ...) shape
+    and every shard performs the *identical* full segment reduction into
+    (G, ...) — same shape, same summation tree as the single-device path —
+    so sharded sub-masters are bit-exact with single-device ones (the same
+    trick ``elastic_update_batched`` uses for the flat master).
+
+    Two segment-reduction paths, picked statically from the topology:
+
+    - **Balanced racks** (capacity divisible by G and ``grp`` is the
+      contiguous balanced assignment ``group_assignment`` produces — the
+      common case): reshape to (G, k/G, ...), broadcast-subtract the
+      sub-master row, reduce over the rack axis. No gather, no scatter —
+      this path costs within ~10% of the flat master reduction.
+    - **General** (uneven racks): gather each worker's sub-master row and
+      segment-sum via a one-hot (G, capacity) matmul. The matmul rather
+      than ``.at[grp].add``: XLA's CPU scatter serializes per index and
+      measures >2x slower than the equivalent matmul at rack sizes.
+
+    The two paths differ in summation order (last-ulp on sub-masters), but
+    the choice is a static function of the topology, so any given config
+    is internally consistent — and bit-exact across placements, which is
+    the invariant tests/test_hierarchy.py pins.
+    """
+    w1 = jnp.asarray(w1, jnp.float32)
+    w2 = jnp.asarray(w2, jnp.float32)
+    grp_np = np.asarray(grp)                 # static topology, never traced
+    cap = grp_np.shape[0]
+    n_groups = jax.tree.leaves(submasters)[0].shape[0]
+    balanced = (cap % n_groups == 0 and np.array_equal(
+        grp_np, (np.arange(cap) * n_groups) // cap))
+    grp = jnp.asarray(grp_np)
+    if axis_name is not None:
+        k_local = jax.tree.leaves(worker_stacked)[0].shape[0]
+        i0 = jax.lax.axis_index(axis_name) * k_local
+        grp_local = jax.lax.dynamic_slice_in_dim(grp, i0, k_local)
+    else:
+        grp_local = grp
+
+    if balanced and axis_name is None:
+        s = cap // n_groups
+
+        def upd(ws, sm):
+            h1 = w1.reshape((n_groups, s) + (1,) * (ws.ndim - 1))
+            h2 = w2.reshape((n_groups, s) + (1,) * (ws.ndim - 1))
+            wf = ws.astype(jnp.float32).reshape(
+                (n_groups, s) + ws.shape[1:])
+            smf = sm.astype(jnp.float32)
+            diff = wf - smf[:, None]
+            acc = jnp.sum(h2 * diff, axis=1)
+            return ((wf - h1 * diff).reshape(ws.shape).astype(ws.dtype),
+                    (smf + acc).astype(sm.dtype))
+
+        return _unzip_pairs(jax.tree.map(upd, worker_stacked, submasters))
+
+    if balanced:
+        s = cap // n_groups
+
+        def upd(ws, sm):
+            h1 = w1.reshape((-1,) + (1,) * (ws.ndim - 1))
+            h2 = w2.reshape((-1,) + (1,) * (ws.ndim - 1))
+            wf = ws.astype(jnp.float32)
+            smf = sm.astype(jnp.float32)
+            diff = wf - jnp.take(smf, grp_local, axis=0)
+            push = jax.lax.all_gather(h2 * diff, axis_name, axis=0,
+                                      tiled=True)
+            # identical values and reduction tree as the single-device
+            # branch: reshape the full push to (G, k/G, ...) and reduce
+            acc = jnp.sum(push.reshape((n_groups, s) + push.shape[1:]),
+                          axis=1)
+            return ((wf - h1 * diff).astype(ws.dtype),
+                    (smf + acc).astype(sm.dtype))
+
+        return _unzip_pairs(jax.tree.map(upd, worker_stacked, submasters))
+
+    seg = (grp[:, None] == jnp.arange(n_groups)[None, :]).astype(jnp.float32)
+
+    def upd(ws, sm):
+        h1 = w1.reshape((-1,) + (1,) * (ws.ndim - 1))
+        h2 = w2.reshape((-1,) + (1,) * (ws.ndim - 1))
+        wf = ws.astype(jnp.float32)
+        smf = sm.astype(jnp.float32)
+        diff = wf - jnp.take(smf, grp_local, axis=0)
+        push = h2 * diff
+        if axis_name is not None:
+            push = jax.lax.all_gather(push, axis_name, axis=0, tiled=True)
+        acc = (seg.T @ push.reshape(push.shape[0], -1)).reshape(smf.shape)
+        return ((wf - h1 * diff).astype(ws.dtype),
+                (smf + acc).astype(sm.dtype))
+
+    return _unzip_pairs(jax.tree.map(upd, worker_stacked, submasters))

@@ -148,7 +148,8 @@ def _analyse(lowered, compiled, mesh, elapsed):
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                opt_name: str = "adahessian", remat: str = "none",
                rules=None, elastic_workers: int = 2,
-               elastic_capacity: int = 0):
+               elastic_capacity: int = 0, groups: int = 1,
+               global_period: int = 1):
     arch = normalize_arch(arch)
     shape = INPUT_SHAPES[shape_name]
     if not shape_supported(arch, shape_name):
@@ -175,7 +176,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         cap = padded_capacity(elastic_capacity or k, mesh.shape["pod"])
         ecfg = ElasticConfig(num_workers=k,
                              capacity=(0 if cap == k else cap),
-                             tau=1, comm_mode="fused", placement="sharded")
+                             tau=1, comm_mode="fused", placement="sharded",
+                             groups=groups, global_period=global_period)
         trainer = ElasticTrainer(model, opt_cfg, ecfg, mesh=mesh)
         wspec = stack_specs(model.spec, cap, "worker")
         f32spec = tree_map_spec(
@@ -205,6 +207,16 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             "round": jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
         }
         state["master_prev"] = state["master"]
+        if trainer._hier:
+            # hierarchical lowering (ISSUE-10): replicated (G, ...)
+            # sub-master trees + rack-level history, like the master
+            G = trainer._n_groups
+            state["submasters"] = jax.tree.map(
+                lambda st: jax.ShapeDtypeStruct((G,) + st.shape, st.dtype,
+                                                sharding=rep),
+                abstract_tree(mspec))
+            state["g_u_hist"] = jax.ShapeDtypeStruct(
+                (G, ecfg.score_window), jnp.float32, sharding=rep)
         slot_mask = lambda: _abstract_pod(ParamSpec((cap,), jnp.bool_), mesh)
         inputs = RoundInputs(
             batches=_abstract_pod(per_worker, mesh, pod_dim=1),
@@ -310,6 +322,12 @@ def main():
                          "multiple of the pod axis, extra slots inactive — "
                          "capacities > workers lower the membership-masked "
                          "round")
+    ap.add_argument("--groups", type=int, default=1,
+                    help="hierarchical elastic lowering (ISSUE-10): rack "
+                         "count for the sub-master level; 1 = flat")
+    ap.add_argument("--global-period", type=int, default=1,
+                    help="rounds between sub-master↔master global syncs "
+                         "in the hierarchical lowering")
     ap.add_argument("--out", default=None)
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
@@ -338,7 +356,9 @@ def main():
                                    opt_name=args.opt, remat=args.remat,
                                    rules=RULE_SETS[args.rules],
                                    elastic_workers=args.elastic_workers,
-                                   elastic_capacity=args.capacity)
+                                   elastic_capacity=args.capacity,
+                                   groups=args.groups,
+                                   global_period=args.global_period)
                 except Exception as e:  # noqa: BLE001
                     r = {"arch": normalize_arch(arch), "shape": shape,
                          "multi_pod": mp, "status": "error",

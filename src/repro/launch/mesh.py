@@ -22,6 +22,7 @@ default single device).
 from __future__ import annotations
 
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 
@@ -50,3 +51,59 @@ def make_host_mesh(*, data: int = 1, model: int = 1, pod: int = 1) -> Mesh:
     this).
     """
     return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+
+
+def make_distributed_mesh(*, coordinator_address=None, num_processes: int = 1,
+                          process_id: int = 0, data: int = 1, model: int = 1,
+                          pod: int = 0) -> Mesh:
+    """Multi-process ('pod', 'data', 'model') mesh (ISSUE-10): one mesh
+    spanning every process's devices, so the sharded coordinator's worker
+    axis tiles across hosts instead of one host's forced device pool.
+
+    With ``num_processes > 1`` this calls ``jax.distributed.initialize``
+    (exactly once — safe to call when the runtime is already initialized)
+    using the ``--coordinator-address/--num-processes/--process-id``
+    plumbing from ``launch/train.py``; process 0 must host the coordinator
+    at ``coordinator_address`` (``host:port``). After init, every process
+    sees the *global* device list and builds the identical mesh over it.
+
+    CPU caveat: jax's CPU backend supports distributed *initialization*
+    (global device visibility, process_index, multihost utils) but not
+    cross-process XLA computations ("Multiprocess computations aren't
+    implemented on the CPU backend"), so on CPU each process falls back to
+    a mesh over its **local** devices — the processes run the same
+    deterministic program side by side (the 2-process CI smoke asserts
+    they agree bit-for-bit on the final master). On TPU/GPU the mesh is
+    genuinely global.
+
+    ``pod = 0`` (default) sizes the pod axis to use every selected device:
+    ``device_count // (data · model)``.
+    """
+    if num_processes > 1:
+        if not coordinator_address:
+            raise ValueError(
+                "make_distributed_mesh: num_processes > 1 needs a "
+                "coordinator_address (host:port of process 0)")
+        try:
+            jax.distributed.initialize(
+                coordinator_address=coordinator_address,
+                num_processes=num_processes, process_id=process_id)
+        except RuntimeError as e:  # already initialized: keep going
+            if "already" not in str(e).lower():
+                raise
+    devices = list(jax.devices())
+    if num_processes > 1 and jax.default_backend() == "cpu":
+        print("[mesh] CPU backend: cross-process XLA computations are "
+              "unsupported — falling back to a process-local mesh "
+              f"({len(jax.local_devices())} local of {len(devices)} global "
+              "devices)", flush=True)
+        devices = list(jax.local_devices())
+    if pod <= 0:
+        pod = max(1, len(devices) // (data * model))
+    n = pod * data * model
+    if n > len(devices):
+        raise ValueError(
+            f"make_distributed_mesh: pod·data·model = {n} exceeds the "
+            f"{len(devices)} available devices")
+    grid = np.asarray(devices[:n]).reshape(pod, data, model)
+    return Mesh(grid, ("pod", "data", "model"))

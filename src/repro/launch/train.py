@@ -29,6 +29,17 @@ only. ``--detector-blind`` additionally zeroes the ground-truth event masks
 echoed into the printed records, so what you see is exactly what the
 controller saw.
 
+Hierarchy & scale-out (ISSUE-10): ``--groups G`` partitions the slot axis
+into G rack-sized groups, each owning a sub-master that its workers
+elastic-average against every round; ``--global-period P`` syncs the
+sub-masters with the global master only every P rounds (τ_g = P·τ), so the
+global barrier amortizes P× (``repro.core.coordinator._comm_phase_hier``).
+``--coordinator-address host:port --num-processes N --process-id i`` spans
+the mesh across N processes via ``jax.distributed`` (sharded placement
+only; on CPU each process falls back to a local mesh — see
+``make_distributed_mesh``). Only process 0 prints rounds; every process
+prints the final master l2 for cross-process agreement checks.
+
 Trace replay (ISSUE-9): ``--dump-trace run.jsonl`` records the exact
 fail/straggle/restart/corrupt/speed/membership stream the run executed
 (including controller-applied resizes) as a JSON-lines scenario trace;
@@ -110,6 +121,13 @@ def main(argv=None):
                          "worker zero master weight and re-anchor it if it "
                          "diverged past float32 range; 0 = paper behaviour "
                          "(repro.core.dynamic_weight)")
+    ap.add_argument("--u-zclip", type=float, default=0.0,
+                    help="absolute-distance containment: refuse (w2=0) any "
+                         "worker whose log-distance sits more than this "
+                         "many robust z-scores (median/MAD over the live "
+                         "pool) above the pool — catches attackers parked "
+                         "at a static distance that score_clip's trend "
+                         "clamp misses; 0 = off")
     ap.add_argument("--byzantine-frac", type=float, default=0.25,
                     help="fraction of slots drawn corrupt under "
                          "--failure-scenario byzantine")
@@ -150,6 +168,24 @@ def main(argv=None):
                          "device, or shard_map the worker axis over the "
                          "mesh's 'pod' axis (requires --comm-mode fused; "
                          "k must divide over the device count)")
+    ap.add_argument("--groups", type=int, default=1,
+                    help="hierarchical averaging (ISSUE-10): partition the "
+                         "slot axis into this many rack-sized groups, each "
+                         "owning a sub-master that workers elastic-average "
+                         "against every round; 1 = the flat topology "
+                         "(requires --comm-mode fused when > 1)")
+    ap.add_argument("--global-period", type=int, default=1,
+                    help="rounds between sub-master↔global-master syncs "
+                         "(τ_g = global_period·τ); the global master is "
+                         "touched only every this many rounds")
+    ap.add_argument("--coordinator-address", default=None, metavar="HOST:PORT",
+                    help="multi-process mesh: jax.distributed coordinator "
+                         "(process 0's address); launch one process per "
+                         "host with matching --num-processes/--process-id")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="total processes in the multi-process mesh")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="this process's index in 0..num_processes-1")
     ap.add_argument("--controller", default="none",
                     choices=("none", "rules"),
                     help="closed-loop membership control (repro.control): "
@@ -194,6 +230,21 @@ def main(argv=None):
                        + [k for _, k in plan])
         if membership == "scale_up" and not args.membership_k:
             capacity = 2 * args.workers
+    mesh = None
+    if args.num_processes > 1 or args.coordinator_address:
+        # multi-process mesh (ISSUE-10): initialize jax.distributed and
+        # span the pod axis over every process's devices (process-local
+        # fallback on CPU — see make_distributed_mesh)
+        if args.placement != "sharded":
+            raise SystemExit(
+                "--coordinator-address/--num-processes need "
+                "--placement sharded (the worker axis must live on the "
+                "mesh for a multi-process run to mean anything)")
+        from repro.launch.mesh import make_distributed_mesh
+
+        mesh = make_distributed_mesh(
+            coordinator_address=args.coordinator_address,
+            num_processes=args.num_processes, process_id=args.process_id)
     if args.placement == "sharded":
         # the slot axis partitions evenly over the pod axis; pad capacity
         # up and leave the extra slots permanently inactive (uneven-shard
@@ -202,11 +253,11 @@ def main(argv=None):
 
         from repro.core.coordinator import padded_capacity
 
-        padded = padded_capacity(capacity or args.workers,
-                                 jax.device_count())
+        n_pod = mesh.shape["pod"] if mesh is not None else jax.device_count()
+        padded = padded_capacity(capacity or args.workers, n_pod)
         if padded != (capacity or args.workers):
             print(f"[train] padding capacity {capacity or args.workers} -> "
-                  f"{padded} (multiple of the {jax.device_count()}-way pod "
+                  f"{padded} (multiple of the {n_pod}-way pod "
                   "axis; extra slots stay inactive)")
             capacity = padded
     ecfg = ElasticConfig(
@@ -216,13 +267,14 @@ def main(argv=None):
         dynamic=not args.no_dynamic, comm_mode=args.comm_mode,
         staleness=args.staleness, placement=args.placement,
         failure_scenario=args.failure_scenario,
-        score_clip=args.score_clip,
+        score_clip=args.score_clip, u_zclip=args.u_zclip,
         byzantine_frac=args.byzantine_frac,
         byzantine_mode=args.byzantine_mode,
         byzantine_scale=args.byzantine_scale,
         hetero_dist=args.hetero_dist, hetero_sigma=args.hetero_sigma,
         hetero_slow_frac=args.hetero_slow_frac,
         hetero_slow_scale=args.hetero_slow_scale,
+        groups=args.groups, global_period=args.global_period,
         membership_scenario=membership, membership_k=args.membership_k,
         membership_round=args.membership_round, membership_plan=plan)
     spec = RunSpec(
@@ -237,14 +289,20 @@ def main(argv=None):
         use_pallas=args.use_pallas,
         controller=(None if args.controller == "none" else args.controller),
         detector_blind=args.detector_blind)
-    sess = ElasticSession(spec)
+    sess = ElasticSession(spec, mesh=mesh)
 
+    # multi-process runs: only process 0 narrates rounds (every process
+    # still executes them; the final master-l2 line prints everywhere so a
+    # launcher can assert cross-process agreement)
+    is_main = args.process_id == 0
     t0 = time.time()
-    if not spec.plain and sess.schedule.has_hetero:
+    if is_main and not spec.plain and sess.schedule.has_hetero:
         print(f"[train] persistent slot speeds: "
               f"{np.asarray(sess.schedule.speed[0]).round(3).tolist()}",
               flush=True)
     for rec in sess.run_iter():
+        if not is_main:
+            continue
         if spec.plain:
             print(f"step {rec.round}: loss={rec.loss:.4f}", flush=True)
             continue
@@ -257,11 +315,21 @@ def main(argv=None):
             extra += f" restart={rec.restart.astype(int).tolist()}"
         if sess.schedule.has_corruption:
             extra += f" corrupt={rec.corrupt.astype(int).tolist()}"
+        if rec.g_h2 is not None and np.any(rec.g_h2):
+            extra += f" g_h2={np.asarray(rec.g_h2).round(3).tolist()}"
         print(f"round {rec.round}: loss={rec.loss:.4f} "
               f"fails={rec.fail.astype(int).tolist()} "
               f"score={np.asarray(rec.score).round(3).tolist()} "
               f"h2={np.asarray(rec.h2).round(3).tolist()}{extra} "
               f"({time.time()-t0:.1f}s)", flush=True)
+    # every process prints this (deterministic cross-process agreement
+    # check for the distributed smoke: identical programs → identical l2)
+    import jax
+
+    l2 = float(np.sqrt(sum(
+        float(np.sum(np.square(np.asarray(x, np.float64))))
+        for x in jax.tree.leaves(sess.master_params))))
+    print(f"[train] final master l2={l2:.10e}", flush=True)
     if sess.controller is not None:
         applied = [a for a in sess.controller.actuator.log if a.applied]
         print(f"[control] {len(applied)} membership action(s) applied:")

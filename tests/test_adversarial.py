@@ -447,3 +447,106 @@ def test_inactive_channels_keep_trace_and_bits(tmp_path):
     for ra, rb in zip(recs_a, recs_b):
         np.testing.assert_array_equal(ra.u, rb.u)
         np.testing.assert_array_equal(ra.corrupt, rb.corrupt)  # both zeros
+
+
+# ---------------------------------------------------------------------------
+# absolute-distance containment (ISSUE-10 satellite: u_zclip closes the
+# parked-static-distance gap documented in docs/paper_map.md deviation #10)
+# ---------------------------------------------------------------------------
+
+def test_robust_zscore_live_pool_statistics():
+    u = jnp.asarray([0.0, 0.1, -0.1, 50.0], jnp.float32)
+    z = np.asarray(dw.robust_zscore(u))
+    assert abs(z[0]) < 1.0 and abs(z[1]) < 2.0
+    assert z[3] > 10.0                       # the parked outlier
+    # live masking: the outlier is measured but never contaminates the
+    # median/MAD of the pool
+    live = jnp.asarray([True, True, True, False])
+    z_live = np.asarray(dw.robust_zscore(u, live))
+    assert z_live[3] > z[3]
+    # all-equal live pool: MAD 0, eps keeps z finite and huge off-pool
+    z_eq = np.asarray(dw.robust_zscore(
+        jnp.asarray([1.0, 1.0, 1.0, 9.0]), jnp.asarray([1, 1, 1, 0], bool)))
+    assert np.isfinite(z_eq[:3]).all() and z_eq[3] > 1e5
+    # NaN u -> NaN z (refused downstream via comparison-fails-closed)
+    assert np.isnan(np.asarray(dw.robust_zscore(
+        jnp.asarray([0.0, jnp.nan]), jnp.asarray([1, 0], bool)))[1])
+
+
+def test_weights_for_u_zclip_refuses_parked_distance():
+    """A worker whose log-distance sits far above the live pool gets w2=0
+    even though its *trend* score is tame (the score_clip blind spot);
+    NaN u fails closed; h1 is untouched; u_zclip=0 and the paper's
+    fixed-alpha/oracle modes ignore u entirely."""
+    cfg = ElasticConfig(alpha=0.5, u_zclip=3.0)
+    a = jnp.zeros((5,), jnp.float32)          # calm trend everywhere
+    u = jnp.asarray([0.0, 0.1, -0.1, 20.0, jnp.nan], jnp.float32)
+    w1, w2 = dw.weights_for(cfg, a, u=u)
+    got = np.asarray(w2)
+    assert got[0] > 0 and got[1] > 0 and got[2] > 0
+    assert got[3] == 0.0                      # parked far from the pool
+    assert got[4] == 0.0                      # non-finite u fails closed
+    np.testing.assert_allclose(np.asarray(w1),
+                               np.asarray(dw.h1(a, 0.5, cfg.score_k)))
+    # u_zclip=0 (default) is bit-identical to ignoring u
+    _, w2_off = dw.weights_for(ElasticConfig(alpha=0.5), a, u=u)
+    _, w2_none = dw.weights_for(ElasticConfig(alpha=0.5), a)
+    np.testing.assert_array_equal(np.asarray(w2_off), np.asarray(w2_none))
+    # fixed-alpha mode is exempt: the paper's baselines stay untouched
+    _, w2_fixed = dw.weights_for(
+        ElasticConfig(alpha=0.5, dynamic=False, u_zclip=3.0), a, u=u)
+    assert np.asarray(w2_fixed)[3] == pytest.approx(0.5)
+
+
+def _park_spec(u_zclip, seed=1, rounds=12):
+    """Noise-mode corruption under AdaHessian: the attack deviation #10
+    documents as sailing under score_clip (huge but *static* distance,
+    trend a ≈ 0)."""
+    return RunSpec(
+        arch="paper-cnn", smoke=True, rounds=rounds, seed=seed,
+        batch_size=4, n_data=96, n_test=32,
+        optimizer=OptimizerConfig(name="adahessian", lr=0.01),
+        elastic=ElasticConfig(num_workers=6, tau=2, comm_mode="fused",
+                              failure_scenario="byzantine",
+                              byzantine_mode="noise", byzantine_scale=20.0,
+                              byzantine_frac=0.34,
+                              score_clip=0.5, u_zclip=u_zclip))
+
+
+def test_noise_park_sails_under_score_clip_but_not_u_zclip():
+    """The committed regression numbers (seed 1, k=6, two parked slots):
+    with score_clip alone the parked workers keep h2 ~ 0.024 — 4x the
+    honest pool's — because their distance is huge but static. With
+    u_zclip=3 their mean h2 over rounds 4+ is exactly 0, the honest pool's
+    weight rises, and the honest workers re-converge to the master
+    (mean honest u drops from ~16 to ~0 once the master stops being
+    dragged)."""
+    unclipped = ElasticSession(_park_spec(u_zclip=0.0))
+    recs0 = unclipped.run()
+    corrupt = unclipped.schedule.corrupt[0]
+    assert list(np.where(corrupt)[0]) == [0, 2]
+    h2_0 = np.stack([r.h2 for r in recs0])[4:]
+    assert float(h2_0[:, corrupt].mean()) > float(h2_0[:, ~corrupt].mean())
+
+    clipped = ElasticSession(_park_spec(u_zclip=3.0))
+    recs1 = clipped.run()
+    np.testing.assert_array_equal(clipped.schedule.corrupt[0], corrupt)
+    h2_1 = np.stack([r.h2 for r in recs1])[4:]
+    assert float(h2_1[:, corrupt].mean()) == 0.0
+    assert float(h2_1[:, ~corrupt].mean()) > 0.01    # measured 0.0286
+    u_honest = np.stack([r.u for r in recs1])[4:, ~corrupt]
+    assert float(u_honest.mean()) < 2.0              # measured ~ -0.08
+    for leaf in jax.tree.leaves(clipped.state["master"]):
+        assert bool(np.isfinite(np.asarray(leaf)).all())
+
+
+@pytest.mark.slow
+def test_noise_park_containment_across_seeds():
+    for seed, slots in ((2, [1]),):
+        sess = ElasticSession(_park_spec(u_zclip=3.0, seed=seed))
+        recs = sess.run()
+        corrupt = sess.schedule.corrupt[0]
+        assert list(np.where(corrupt)[0]) == slots
+        h2 = np.stack([r.h2 for r in recs])[4:]
+        assert float(h2[:, corrupt].mean()) == 0.0
+        assert float(h2[:, ~corrupt].mean()) > 0.01

@@ -1,0 +1,415 @@
+"""Two-level hierarchical elastic averaging (ISSUE-10): rack-level
+sub-masters, two-period sync, and the degenerate collapse to the flat
+fused phase.
+
+Covers the acceptance surface: config validation, grouped
+event-order-equivalent schedule weights vs a per-rack sequential unroll,
+groups=1/global_period=1 bit-exactness with flat fused, the two-period
+global-sync cadence, uneven hierarchy shapes (capacity not divisible by
+groups, a fully dark rack, membership growth across a group boundary),
+and checkpoint restore at a different group count. Sharded-placement
+bit-exactness of the hierarchy lives with the other forced-device
+subprocess tests in tests/test_placement.py idiom — here as a subprocess
+too, since the parent pytest process pins a single CPU device.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ElasticSession, RunSpec
+from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+from repro.core import dynamic_weight as dw
+from repro.core.coordinator import ElasticTrainer
+from repro.models.registry import build_model
+
+
+def _trainer(k, *, groups=1, global_period=1, force_hier=False, **kw):
+    model = build_model(get_config("paper_cnn"))
+    defaults = dict(num_workers=k, tau=1, alpha=0.1, dynamic=True,
+                    comm_mode="fused", groups=groups,
+                    global_period=global_period)
+    defaults.update(kw)
+    tr = ElasticTrainer(model, OptimizerConfig(name="sgd", lr=0.01),
+                        ElasticConfig(**defaults))
+    if force_hier:
+        tr.hierarchical = True
+        tr.__post_init__()
+    return tr
+
+
+def _desynced_state(tr, seed=0, scale=0.1, desync_submasters=False):
+    state = tr.init_state(jax.random.key(seed))
+    state["workers"] = jax.tree.map(
+        lambda x: x + jax.random.normal(jax.random.key(seed + 1), x.shape,
+                                        x.dtype) * scale, state["workers"])
+    if desync_submasters:
+        state["submasters"] = jax.tree.map(
+            lambda x: x + jax.random.normal(jax.random.key(seed + 2),
+                                            x.shape, x.dtype) * scale,
+            state["submasters"])
+    return state
+
+
+def _comm(tr, state, rounds=1, **kw):
+    metrics = []
+    fail = jnp.zeros((tr.ecfg.cap,), bool)
+    fr = jnp.zeros((tr.ecfg.cap,), bool)
+    for _ in range(rounds):
+        state, m = tr.comm_phase(state, kw.pop("fail_mask", fail),
+                                 kw.pop("failed_recent", fr), **kw)
+        metrics.append(m)
+    return state, metrics
+
+
+# ---------------------------------------------------------------------------
+# config validation + group assignment
+# ---------------------------------------------------------------------------
+
+def test_hierarchy_config_validation():
+    with pytest.raises(ValueError):
+        ElasticConfig(groups=0)
+    with pytest.raises(ValueError):
+        ElasticConfig(num_workers=4, groups=5)      # more racks than slots
+    with pytest.raises(ValueError):
+        ElasticConfig(global_period=0)
+    with pytest.raises(ValueError):
+        ElasticConfig(groups=2, comm_mode="sequential")
+    with pytest.raises(ValueError):
+        ElasticConfig(global_period=2, comm_mode="sequential")
+    with pytest.raises(ValueError):
+        ElasticConfig(groups=2, comm_mode="fused", staleness=1)
+    with pytest.raises(ValueError):
+        ElasticConfig(u_zclip=-1.0)
+    # trivial topology is not "hierarchical" and needs no fused backend
+    assert not ElasticConfig(groups=1, global_period=1).hierarchical
+    assert ElasticConfig(num_workers=4, groups=2,
+                         comm_mode="fused").hierarchical
+    assert ElasticConfig(global_period=2, comm_mode="fused").hierarchical
+
+
+@pytest.mark.parametrize("cap,groups", [(8, 4), (7, 3), (10, 3), (4, 4),
+                                        (5, 1), (4, 9)])
+def test_group_assignment_contiguous_and_covering(cap, groups):
+    grp = dw.group_assignment(cap, groups)
+    assert grp.shape == (cap,) and grp.dtype == np.int32
+    eff = min(groups, cap)
+    # contiguous, non-decreasing, every rack non-empty
+    assert np.all(np.diff(grp) >= 0)
+    assert set(grp.tolist()) == set(range(eff))
+    # balanced: rack sizes differ by at most one
+    sizes = np.bincount(grp)
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_grouped_schedule_weights_match_sequential_unroll():
+    """Each rack's reduction must equal a sequential event-ordered scan of
+    its own members: g_i = h2_i · Π_{j>i, same rack} (1 − h2_j), with no
+    cross-rack discounting."""
+    rng = np.random.default_rng(0)
+    w2 = rng.uniform(0.0, 0.4, size=9).astype(np.float32)
+    grp = dw.group_assignment(9, 3)
+    got = np.asarray(dw.master_schedule_weights_grouped(
+        jnp.asarray(w2), jnp.asarray(grp)))
+    want = np.empty_like(w2)
+    for i in range(9):
+        acc = w2[i]
+        for j in range(i + 1, 9):
+            if grp[j] == grp[i]:
+                acc *= 1.0 - w2[j]
+        want[i] = acc
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # degenerate single rack == the flat schedule weights
+    flat = np.asarray(dw.master_schedule_weights(jnp.asarray(w2)))
+    one = np.asarray(dw.master_schedule_weights_grouped(
+        jnp.asarray(w2), jnp.zeros((9,), jnp.int32)))
+    np.testing.assert_allclose(one, flat, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# degenerate collapse + two-period cadence
+# ---------------------------------------------------------------------------
+
+def test_degenerate_hierarchy_bit_exact_with_flat_fused():
+    """groups=1, global_period=1 forced through the hierarchical state must
+    reproduce the flat fused master bit-for-bit, with the lone sub-master
+    mirroring it."""
+    flat = _trainer(6)
+    hier = _trainer(6, force_hier=True)
+    s_flat = _desynced_state(flat)
+    s_hier = _desynced_state(hier)
+    assert "submasters" in s_hier and "g_u_hist" in s_hier
+    s_flat, _ = _comm(flat, s_flat, rounds=3)
+    s_hier, ms = _comm(hier, s_hier, rounds=3)
+    for a, b in zip(jax.tree.leaves(s_flat["master"]),
+                    jax.tree.leaves(s_hier["master"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for m, sm in zip(jax.tree.leaves(s_hier["master"]),
+                     jax.tree.leaves(s_hier["submasters"])):
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(sm[0]))
+    # degenerate metrics exist but are zero placeholders
+    assert np.asarray(ms[-1]["g_h2"]).shape == (1,)
+    assert float(np.asarray(ms[-1]["g_h2"]).sum()) == 0.0
+
+
+def test_two_period_global_sync_cadence():
+    """The global phase fires exactly on rounds divisible by global_period;
+    off-cycle rounds leave the master and g_u_hist untouched."""
+    tr = _trainer(6, groups=3, global_period=2)
+    state = _desynced_state(tr, desync_submasters=True)
+    masters, g_hists, metrics = [], [], []
+    for r in range(4):
+        state, ms = _comm(tr, state)
+        masters.append(jax.tree.leaves(state["master"])[0])
+        g_hists.append(np.asarray(state["g_u_hist"]))
+        metrics.append(ms[0])
+    for r in range(4):
+        synced = ((r + 1) % 2) == 0
+        # g_u diagnostics are zeroed by the skip branch, recorded on sync
+        assert bool(np.any(np.asarray(metrics[r]["g_u"]) != 0.0)) == synced
+        prev_hist = np.full_like(g_hists[r], -30.0) if r == 0 else \
+            g_hists[r - 1]
+        if synced:
+            assert not np.array_equal(g_hists[r], prev_hist)
+        else:
+            np.testing.assert_array_equal(g_hists[r], prev_hist)
+    # off-cycle round 3 (index 2) must not move the master
+    np.testing.assert_array_equal(np.asarray(masters[2]),
+                                  np.asarray(masters[1]))
+    assert not np.array_equal(np.asarray(masters[3]), np.asarray(masters[2]))
+
+
+# ---------------------------------------------------------------------------
+# uneven shapes: indivisible capacity, dark rack, growth across a boundary
+# ---------------------------------------------------------------------------
+
+def test_uneven_capacity_runs_finite():
+    """capacity=7 over 3 racks (3+2+2): everything stays finite and every
+    rack's sub-master moves at the global sync."""
+    tr = _trainer(7, groups=3, global_period=2)
+    state = _desynced_state(tr, desync_submasters=True)
+    before = [np.asarray(x).copy()
+              for x in jax.tree.leaves(state["submasters"])]
+    state, _ = _comm(tr, state, rounds=2)
+    for leaf in jax.tree.leaves(state["master"]) + jax.tree.leaves(
+            state["submasters"]):
+        assert np.isfinite(np.asarray(leaf)).all()
+    after = [np.asarray(x) for x in jax.tree.leaves(state["submasters"])]
+    for g in range(3):
+        assert not np.array_equal(before[0][g], after[0][g])
+
+
+def test_dark_rack_is_down_weighted_at_the_global_sync():
+    """A rack whose every member failed this round syncs nothing: its
+    sub-master is untouched by both levels, its g_h2 is 0, while live
+    racks exchange — the dead-worker rule lifted to rack granularity."""
+    tr = _trainer(6, groups=3, global_period=1)
+    grp = dw.group_assignment(6, 3)
+    dark = 1
+    fail = jnp.asarray(grp == dark)          # kill every member of rack 1
+    state = _desynced_state(tr, desync_submasters=True)
+    sm_before = [np.asarray(x).copy()
+                 for x in jax.tree.leaves(state["submasters"])]
+    state, ms = _comm(tr, state, fail_mask=fail)
+    g_h2 = np.asarray(ms[0]["g_h2"])
+    assert g_h2.shape == (3,)
+    assert g_h2[dark] == 0.0
+    sm_after = [np.asarray(x) for x in jax.tree.leaves(state["submasters"])]
+    np.testing.assert_array_equal(sm_before[0][dark], sm_after[0][dark])
+    for g in (0, 2):
+        assert not np.array_equal(sm_before[0][g], sm_after[0][g])
+    # a dark rack still records its drift: g_u_hist advanced for all racks
+    assert not np.array_equal(np.asarray(state["g_u_hist"][dark]),
+                              np.full_like(np.asarray(
+                                  state["g_u_hist"][dark]), -30.0))
+
+
+def test_membership_growth_across_group_boundary():
+    """Start with only rack 0 populated; grow the live pool across the
+    group boundary. The vacant rack's g_u_hist stays frozen until it gains
+    a live member, then starts advancing."""
+    tr = _trainer(8, groups=2, global_period=1)
+    state = _desynced_state(tr, desync_submasters=True)
+    small = jnp.arange(8) < 3                 # rack 0 only (slots 0–2)
+    grown = jnp.arange(8) < 6                 # crosses into rack 1
+    state, ms1 = _comm(tr, state, active=small)
+    hist1 = np.asarray(state["g_u_hist"])
+    np.testing.assert_array_equal(hist1[1], np.full_like(hist1[1], -30.0))
+    assert np.asarray(ms1[0]["g_u"])[1] == 0.0      # vacant rack: zeroed
+    assert not np.array_equal(hist1[0], np.full_like(hist1[0], -30.0))
+    state, ms2 = _comm(tr, state, active=grown)
+    hist2 = np.asarray(state["g_u_hist"])
+    assert not np.array_equal(hist2[1], np.full_like(hist2[1], -30.0))
+    for leaf in jax.tree.leaves(state["master"]):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+# ---------------------------------------------------------------------------
+# session + checkpoint threading
+# ---------------------------------------------------------------------------
+
+def _hier_spec(groups=2, global_period=2, k=5, rounds=3, seed=1):
+    return RunSpec(
+        arch="paper-cnn", optimizer=OptimizerConfig(name="sgd", lr=0.01),
+        elastic=ElasticConfig(num_workers=k, tau=1, dynamic=True,
+                              comm_mode="fused", groups=groups,
+                              global_period=global_period),
+        rounds=rounds, seed=seed, batch_size=4, n_data=64, n_test=32)
+
+
+def test_session_records_carry_group_metrics_with_cadence():
+    sess = ElasticSession(_hier_spec(rounds=4))
+    recs = sess.run()
+    for r in recs:
+        assert r.g_u is not None and r.g_u.shape == (2,)
+        synced = bool(np.any(r.g_u != 0.0))
+        assert synced == (((r.round + 1) % 2) == 0)
+    # flat sessions carry no group diagnostics
+    flat = ElasticSession(RunSpec(
+        arch="paper-cnn", optimizer=OptimizerConfig(name="sgd", lr=0.01),
+        elastic=ElasticConfig(num_workers=3, tau=1, dynamic=True,
+                              comm_mode="fused"),
+        rounds=1, seed=0, batch_size=4, n_data=64, n_test=32))
+    assert flat.run()[0].g_u is None
+
+
+def test_checkpoint_restore_at_different_group_count(tmp_path):
+    """Racks saved at groups=2 are carried into a groups=3 session (the
+    extra rack seeds from the master); a flat session restores the same
+    checkpoint ignoring the hierarchy; a hierarchical session restores a
+    flat checkpoint with every rack seeded from the master."""
+    sess = ElasticSession(_hier_spec(groups=2))
+    sess.run()
+    path = os.path.join(str(tmp_path), "ck")
+    sess.save(path)
+
+    same = ElasticSession(_hier_spec(groups=2))
+    meta = same.restore(path)
+    assert meta["elastic"]["groups"] == 2
+    assert meta["elastic"]["global_period"] == 2
+    for a, b in zip(jax.tree.leaves(sess.state["submasters"]),
+                    jax.tree.leaves(same.state["submasters"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(sess.state["g_u_hist"]),
+                                  np.asarray(same.state["g_u_hist"]))
+
+    grown = ElasticSession(_hier_spec(groups=3))
+    grown.restore(path)
+    sm_old = jax.tree.leaves(sess.state["submasters"])[0]
+    sm_new = jax.tree.leaves(grown.state["submasters"])[0]
+    m_new = jax.tree.leaves(grown.state["master"])[0]
+    assert sm_new.shape[0] == 3
+    np.testing.assert_array_equal(np.asarray(sm_new[:2]), np.asarray(sm_old))
+    np.testing.assert_array_equal(np.asarray(sm_new[2]), np.asarray(m_new))
+    assert np.asarray(grown.state["g_u_hist"]).shape[0] == 3
+
+    flat = ElasticSession(RunSpec(
+        arch="paper-cnn", optimizer=OptimizerConfig(name="sgd", lr=0.01),
+        elastic=ElasticConfig(num_workers=5, tau=1, dynamic=True,
+                              comm_mode="fused"),
+        rounds=2, seed=1, batch_size=4, n_data=64, n_test=32))
+    flat.restore(path)
+    for a, b in zip(jax.tree.leaves(sess.state["master"]),
+                    jax.tree.leaves(flat.state["master"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert "submasters" not in flat.state
+
+    flat_path = os.path.join(str(tmp_path), "ck_flat")
+    flat.save(flat_path)
+    rehier = ElasticSession(_hier_spec(groups=2))
+    rehier.restore(flat_path)
+    sm = jax.tree.leaves(rehier.state["submasters"])[0]
+    m = jax.tree.leaves(rehier.state["master"])[0]
+    for g in range(2):
+        np.testing.assert_array_equal(np.asarray(sm[g]), np.asarray(m))
+
+
+# ---------------------------------------------------------------------------
+# sharded placement bit-exactness (forced-device subprocess)
+# ---------------------------------------------------------------------------
+
+_SHARDED_EQUIV = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ElasticConfig, OptimizerConfig, get_config
+from repro.core.coordinator import ElasticTrainer, RoundInputs
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import build_model
+
+
+def mk(placement, mesh=None, k=8):
+    model = build_model(get_config("paper_cnn"))
+    return ElasticTrainer(
+        model, OptimizerConfig(name="sgd", lr=0.01),
+        ElasticConfig(num_workers=k, tau=2, alpha=0.1, dynamic=True,
+                      comm_mode="fused", placement=placement,
+                      groups=3, global_period=2),
+        mesh=mesh)
+
+
+def batches(k, tau, rng):
+    x = jax.random.normal(rng, (tau, k, 2, 28, 28, 1), jnp.float32)
+    y = jax.random.randint(jax.random.fold_in(rng, 1), (tau, k, 2), 0, 10)
+    return {"images": x, "labels": y}
+
+
+def run(tr, sharded, n_rounds=4, seed=0):
+    k = tr.ecfg.cap
+    state = tr.init_state(jax.random.key(seed))
+    if sharded:
+        from jax.sharding import NamedSharding
+        specs = tr.state_shard_specs()
+        state = {kk: jax.device_put(v, NamedSharding(tr.mesh, specs[kk]))
+                 for kk, v in state.items()}
+    mets = []
+    for r in range(n_rounds):
+        rng = jax.random.fold_in(jax.random.key(seed + 100), r)
+        inp = RoundInputs(batches=batches(k, tr.ecfg.tau,
+                                          jax.random.fold_in(rng, 2)),
+                          rng=rng,
+                          fail=jnp.zeros((k,), bool),
+                          failed_recent=jnp.zeros((k,), bool))
+        step = tr.round_step_sharded if sharded else tr.round_step
+        state, m = step(state, inp)
+        mets.append(m)
+    return state, mets
+
+
+st1, m1 = run(mk("single"), sharded=False)
+mesh = make_host_mesh(pod=4)
+st2, m2 = run(mk("sharded", mesh), sharded=True)
+for key in ("master", "submasters"):
+    for a, b in zip(jax.tree.leaves(st1[key]), jax.tree.leaves(st2[key])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+for a, b in zip(m1, m2):
+    np.testing.assert_array_equal(np.asarray(a["h2"]), np.asarray(b["h2"]))
+    np.testing.assert_array_equal(np.asarray(a["g_h2"]),
+                                  np.asarray(b["g_h2"]))
+print("HIER_SHARDED_BIT_EXACT")
+"""
+
+
+def test_sharded_hierarchy_matches_single_bit_exact():
+    """Master, sub-masters and rack diagnostics agree bit-for-bit between
+    single and 4-way sharded placement (uneven 3-rack topology over 8
+    slots, two-period sync) — run in a subprocess so the forced device
+    count applies before jax initializes."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SHARDED_EQUIV],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "HIER_SHARDED_BIT_EXACT" in out.stdout
